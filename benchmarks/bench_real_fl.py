@@ -1,0 +1,69 @@
+"""REAL-training benchmark (slow path, ~15-30 min on this container's CPU):
+two-job groups with actual vmap'd local SGD + FedAvg under each scheduler.
+
+  PYTHONPATH=src python -m benchmarks.bench_real_fl [--rounds 15]
+
+The paper's Tables 1-2 setting in miniature: simulated wall-clock, REAL
+accuracy. The scheduler-plane benchmark (bench_groups.py) is the fast
+default; this one validates that the ordering holds under real learning.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.config.base import JobConfig
+from repro.configs.paper_models import cnn_b, lenet5
+from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
+from repro.data.synthetic import make_classification_dataset
+from repro.fl.partition import noniid_partition
+from repro.fl.runtime import FLJobRuntime, MultiRuntime
+
+
+def run(scheduler: str, rounds: int, devices: int = 40, seed: int = 5):
+    jobs, runtimes = [], []
+    for jid, (mk, target) in enumerate(((lenet5, 0.95), (cnn_b, 0.85))):
+        cfg = mk()
+        x, y = make_classification_dataset(8000, cfg.input_shape,
+                                           cfg.num_classes, noise=1.2, seed=jid)
+        ex, ey = make_classification_dataset(800, cfg.input_shape,
+                                             cfg.num_classes, noise=1.2,
+                                             seed=100 + jid)
+        part = noniid_partition(y, devices, seed=jid)
+        job = JobConfig(job_id=jid, model=cfg, target_metric=target,
+                        max_rounds=rounds, local_epochs=3, batch_size=32,
+                        lr=0.02)
+        jobs.append(job)
+        runtimes.append(FLJobRuntime(job, x, y, part, ex, ey, seed=jid))
+    pool = DevicePool.heterogeneous(devices, len(jobs), seed=seed)
+    cm = CostModel(pool, alpha=4.0, beta=0.25)
+    cm.calibrate([3.0] * len(jobs), n_sel=5)
+    eng = MultiJobEngine(jobs, pool, cm,
+                         get_scheduler(scheduler, cost_model=cm, seed=0),
+                         MultiRuntime(runtimes), n_sel=5)
+    eng.run()
+    return eng.summary()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--schedulers", default="random,greedy,bods")
+    args = ap.parse_args()
+    print("\n== Real-FL scheduler comparison (2 jobs, non-IID, "
+          f"{args.rounds} rounds) ==")
+    for sched in args.schedulers.split(","):
+        s = run(sched, args.rounds)
+        cells = " ".join(
+            f"{n}: acc={v['best_accuracy']:.3f} t={v['makespan']/60:.0f}m"
+            for n, v in s.items())
+        print(f"{sched:8s} {cells}")
+        for n, v in s.items():
+            print(f"CSV,real_fl,{sched},{n},{v['best_accuracy']:.4f},"
+                  f"{v['makespan']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""§Roofline table: read the dry-run JSON and emit the per-cell terms.
+
+Falls back to a clear message if the dry-run has not been executed
+(``python -m repro.launch.dryrun --all``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def main(path: str = DRYRUN_JSON):
+    if not os.path.exists(path):
+        print("roofline: dryrun_results.json missing — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    with open(path) as f:
+        d = json.load(f)
+    print("\n== Roofline (single-pod 16x16, per-device terms in seconds) ==")
+    print(f"{'arch':18s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+          f"{'coll':>9s} {'dominant':>10s} {'roofl%':>7s} {'useful':>7s}")
+    for k in sorted(d):
+        v = d[k]
+        if v.get("status") != "ok" or v.get("mesh") != "single":
+            continue
+        r = v["roofline"]
+        print(f"{v['arch']:18s} {v['shape']:12s} {r['compute_s']:9.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['dominant']:>10s} {r['roofline_fraction']*100:6.2f}% "
+              f"{r['useful_flops_ratio']:7.2f}")
+        print(f"CSV,roofline,{v['arch']},{v['shape']},{r['compute_s']:.6f},"
+              f"{r['memory_s']:.6f},{r['collective_s']:.6f},{r['dominant']},"
+              f"{r['roofline_fraction']:.4f}")
+    n_multi = sum(1 for v in d.values()
+                  if v.get("status") == "ok" and v.get("mesh") == "multi")
+    print(f"(multi-pod mesh: {n_multi} cells compiled OK — §Dry-run)")
+
+
+if __name__ == "__main__":
+    main()

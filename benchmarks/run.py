@@ -1,0 +1,42 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --only groups,roofline
+
+Emits human tables + machine CSV lines (prefix "CSV,").
+Table map: groups -> paper Tables 1-2 (+Figs 3,5,6,7 trajectories as CSV),
+mj_vs_sj -> Table 5, ablation -> appendix fairness ablation,
+roofline -> EXPERIMENTS.md §Roofline source data.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="groups,mj_vs_sj,ablation,roofline")
+    args = ap.parse_args()
+    picks = set(args.only.split(","))
+    t0 = time.time()
+
+    if "groups" in picks:
+        from benchmarks import bench_groups
+        bench_groups.main()
+    if "mj_vs_sj" in picks:
+        from benchmarks import bench_multijob_vs_single
+        bench_multijob_vs_single.main()
+    if "ablation" in picks:
+        from benchmarks import bench_ablation
+        bench_ablation.main()
+    if "roofline" in picks:
+        from benchmarks import bench_roofline
+        bench_roofline.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

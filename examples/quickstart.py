@@ -1,0 +1,51 @@
+"""Quickstart: schedule 3 federated jobs over 100 heterogeneous devices.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Runs the paper's core loop end to end in under a minute: a shared device
+pool, the time+fairness cost model, and BODS vs Random scheduling — printing
+the per-job time-to-target and the speedup.
+"""
+
+import numpy as np
+
+from repro.config.base import ArchFamily, JobConfig, ModelConfig
+from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
+from repro.fl.runtime import SyntheticRuntime
+
+
+def make_jobs(n=3, target=0.8):
+    mc = ModelConfig(name="clf", family=ArchFamily.CNN, cnn_spec=(("flatten",),),
+                     input_shape=(4, 4, 1), num_classes=10)
+    return [JobConfig(job_id=i, model=mc, target_metric=target, max_rounds=150)
+            for i in range(n)]
+
+
+def run(scheduler: str) -> float:
+    pool = DevicePool.heterogeneous(num_devices=100, num_jobs=3, seed=1)
+    cost = CostModel(pool, alpha=4.0, beta=0.25)
+    cost.calibrate([5.0] * 3, n_sel=10)
+    engine = MultiJobEngine(
+        jobs=make_jobs(),
+        pool=pool,
+        cost_model=cost,
+        scheduler=get_scheduler(scheduler, cost_model=cost, seed=0),
+        runtime=SyntheticRuntime(num_jobs=3, num_devices=100, seed=2),
+        n_sel=10,
+    )
+    engine.run()
+    makespan = max(v["makespan"] for v in engine.summary().values())
+    for name, v in engine.summary().items():
+        t2t = "-" if v["time_to_target"] is None else f"{v['time_to_target']/60:.0f} min"
+        print(f"  [{scheduler}] {name}: best_acc={v['best_accuracy']:.3f} "
+              f"time_to_target={t2t}")
+    return makespan
+
+
+if __name__ == "__main__":
+    print("Random scheduling (FedAvg baseline):")
+    t_random = run("random")
+    print("BODS (Bayesian-optimization scheduling, this paper):")
+    t_bods = run("bods")
+    print(f"\nmakespan: random={t_random/60:.0f} min, bods={t_bods/60:.0f} min "
+          f"-> {t_random/t_bods:.2f}x faster")

@@ -1,0 +1,70 @@
+"""Batched LM serving with continuous batching (reduced qwen3 config).
+
+  PYTHONPATH=src python examples/serve_batched.py [--requests 12]
+
+Builds the decode state, runs one fused serve_step per token across all
+slots, and refills finished slots from the request queue — the production
+decode loop in miniature (the full-size path is exercised by the
+decode_32k dry-run cells).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.qwen3_1p7b import reduced
+from repro.launch.steps import make_serve_step
+from repro.models.transformer import init_decode_state, lm_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced()
+    params, _ = lm_init(cfg, seed=0)
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    B = args.slots
+    state = init_decode_state(cfg, B, 128)
+    rng = np.random.default_rng(0)
+    queue = [(int(rng.integers(0, cfg.vocab_size)), args.max_new)
+             for _ in range(args.requests)]
+
+    slot_tok = jnp.zeros((B,), jnp.int32)
+    slot_left = np.zeros(B, np.int64)
+    lengths = jnp.zeros((B,), jnp.int32)
+    done, steps = 0, 0
+    t0 = time.time()
+    while done < args.requests:
+        for b in range(B):
+            if slot_left[b] == 0 and queue:
+                tok, n = queue.pop()
+                slot_tok = slot_tok.at[b].set(tok)
+                slot_left[b] = n
+                lengths = lengths.at[b].set(0)
+        logits, state = serve_step(params, state, slot_tok, lengths)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        active = jnp.asarray(slot_left > 0)
+        lengths = lengths + active
+        slot_tok = jnp.where(active, nxt, slot_tok)
+        steps += 1
+        for b in range(B):
+            if slot_left[b] > 0:
+                slot_left[b] -= 1
+                done += slot_left[b] == 0
+    dt = time.time() - t0
+    total = args.requests * args.max_new
+    print(f"served {args.requests} requests ({total} tokens) in {steps} fused "
+          f"steps / {dt:.2f}s -> {total/dt:.0f} tok/s on CPU "
+          f"(slot utilization {total/(steps*B)*100:.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro — MJ-FL: Efficient Device Scheduling with Multi-Job Federated Learning.
+
+A production-grade multi-pod JAX framework reproducing and extending
+Zhou, Liu et al., "Efficient Device Scheduling with Multi-Job Federated
+Learning" (AAAI'22). The paper's contribution (multi-job device scheduling
+with a time+fairness cost model, BODS and RLDS schedulers) lives in
+``repro.core``; the surrounding substrate (models, optimizers, data,
+checkpointing, sharded launch) makes it deployable.
+"""
+
+__version__ = "0.1.0"

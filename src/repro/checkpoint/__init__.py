@@ -1,0 +1,9 @@
+"""Checkpointing: atomic pytree save/restore with elastic re-sharding."""
+
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

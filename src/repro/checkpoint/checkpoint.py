@@ -1,0 +1,161 @@
+"""Atomic, manifest-driven pytree checkpoints (pure numpy .npz container).
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — tree structure, leaf dtypes/shapes, metadata
+            arrays.npz      — flat leaf arrays keyed "leaf_<i>"
+            .complete       — commit marker (written LAST -> atomic restore)
+
+Fault-tolerance contract:
+- ``save`` writes into a temp dir then os.rename's it into place; a crash
+  mid-save never corrupts the latest checkpoint.
+- ``restore`` picks the newest COMMITTED step; partial saves are ignored and
+  garbage-collected.
+- Elastic restore: leaves are stored unsharded (host gathers); on resume the
+  caller re-device_puts against the CURRENT mesh's shardings, so the job can
+  restart on a different device count (EXPERIMENTS.md §Dry-run demonstrates
+  restore across 256- and 512-chip meshes).
+- The data-pipeline cursor and scheduler states ride in ``extra`` so a
+  restart resumes the exact batch stream.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+_MARKER = ".complete"
+
+# numpy's savez cannot serialize ml_dtypes (bfloat16 etc.) — store them as
+# same-width integer views and restore from the manifest dtype.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _encode(a: np.ndarray) -> np.ndarray:
+    name = a.dtype.name
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name][1])
+    return a
+
+
+def _decode(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return a.view(_EXOTIC[dtype_name][0])
+    return a
+
+
+def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory)
+    try:
+        flat, _ = _flatten_with_paths(tree)
+        raw = [np.asarray(jax.device_get(v)) for _, v in flat]
+        arrays = {f"leaf_{i}": _encode(a) for i, a in enumerate(raw)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in flat],
+            "dtypes": [a.dtype.name for a in raw],
+            "shapes": [list(a.shape) for a in raw],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, _MARKER), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _committed_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, _MARKER)):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
+                    shardings: Optional[PyTree] = None
+                    ) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore the newest (or given) committed step into the structure of
+    ``like``. If ``shardings`` is given, leaves are device_put against it
+    (elastic re-shard onto the current mesh)."""
+    steps = _committed_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [_decode(data[f"leaf_{i}"], manifest["dtypes"][i])
+              for i in range(len(manifest["keys"]))]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(flat_like) == len(leaves), "checkpoint/model structure mismatch"
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        leaves = [jax.device_put(l.astype(fl.dtype), s)
+                  for l, fl, s in zip(leaves, flat_like, flat_sh)]
+    else:
+        leaves = [np.asarray(l, dtype=fl.dtype) for l, fl in zip(leaves, flat_like)]
+    return step, treedef.unflatten(leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """Keep-last-N manager with crash-safe GC of partial saves."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._gc_partial()
+
+    def _gc_partial(self) -> None:
+        for name in os.listdir(self.directory):
+            p = os.path.join(self.directory, name)
+            if name.startswith(".tmp_") or (
+                    name.startswith("step_") and not os.path.exists(os.path.join(p, _MARKER))):
+                shutil.rmtree(p, ignore_errors=True)
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
+        path = save_checkpoint(self.directory, step, tree, extra)
+        for s in _committed_steps(self.directory)[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+        return path
+
+    def restore_latest(self, like: PyTree, shardings=None):
+        return load_checkpoint(self.directory, like, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        steps = _committed_steps(self.directory)
+        return steps[-1] if steps else None

@@ -1,0 +1,32 @@
+"""Configuration system: typed configs for models, shapes, meshes, training, FL."""
+
+from repro.config.base import (
+    ArchFamily,
+    AttentionKind,
+    FLConfig,
+    JobConfig,
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.config.shapes import SHAPES, shape_applicable
+from repro.config.registry import get_arch, list_archs, register_arch
+
+__all__ = [
+    "ArchFamily",
+    "AttentionKind",
+    "FLConfig",
+    "JobConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "OptimizerConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "SHAPES",
+    "shape_applicable",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+]

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Each module in ``repro/configs/`` registers its ModelConfig at import time;
+``get_arch`` lazily imports the package so CLI users just pass the id.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config.base import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    importlib.import_module("repro.configs")
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,32 @@
+"""Assigned architecture configs (one module per arch) + the paper's FL model groups.
+
+Importing this package registers every arch with the registry, enabling
+``repro.config.get_arch("<id>")`` and ``--arch <id>`` on all CLIs.
+"""
+
+from repro.configs import (  # noqa: F401
+    dbrx_132b,
+    deepseek_67b,
+    glm4_9b,
+    hymba_1p5b,
+    kimi_k2_1t_a32b,
+    musicgen_medium,
+    paligemma_3b,
+    paper_models,
+    qwen3_1p7b,
+    qwen3_8b,
+    xlstm_350m,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen3-1.7b",
+    "qwen3-8b",
+    "deepseek-67b",
+    "glm4-9b",
+    "musicgen-medium",
+    "dbrx-132b",
+    "kimi-k2-1t-a32b",
+    "hymba-1.5b",
+    "xlstm-350m",
+    "paligemma-3b",
+)

@@ -1,0 +1,24 @@
+"""The paper's primary contribution: multi-job FL device scheduling.
+
+- ``devices``  — heterogeneous device pool with shifted-exponential time model (Formula 4)
+- ``cost``     — time + data-fairness cost model (Formulas 2, 3, 5, 8)
+- ``plans``    — scheduling-plan representation and invariants
+- ``schedulers`` — BODS (GP+EI), RLDS (LSTM+REINFORCE), Random, FedCS, Greedy,
+  Genetic, SimulatedAnnealing
+- ``multijob`` — event-driven parallel multi-job engine (Fig. 1 process)
+- ``loss_estimation`` — round-budget estimation (Formula 13)
+"""
+
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+from repro.core.multijob import MultiJobEngine, RoundRecord
+from repro.core.schedulers import get_scheduler, list_schedulers
+
+__all__ = [
+    "CostModel",
+    "DevicePool",
+    "MultiJobEngine",
+    "RoundRecord",
+    "get_scheduler",
+    "list_schedulers",
+]

@@ -1,0 +1,100 @@
+"""Heterogeneous device pool with the paper's shifted-exponential time model.
+
+Formula 4:  P[t_m^k < t] = 1 - exp(-(mu_k / (tau_m D_k^m)) * (t - tau_m a_k D_k^m))
+i.e. t_m^k = tau_m * a_k * D_k^m  +  Exp(scale = tau_m * D_k^m / mu_k)
+
+- ``a_k``  — deterministic per-sample cost floor (inverse max capability)
+- ``mu_k`` — fluctuation rate (larger mu -> less jitter)
+- ``D_k^m`` — local dataset size of job m on device k
+- ``tau_m`` — local epochs of job m
+
+Expected time:  E[t_m^k] = tau_m * D_k^m * (a_k + 1/mu_k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DevicePool:
+    """K devices, their capabilities, per-job data sizes, and occupancy."""
+
+    a: np.ndarray          # (K,) capability floor, seconds per (epoch * sample)
+    mu: np.ndarray         # (K,) fluctuation rate
+    data_sizes: np.ndarray  # (K, M) samples of job m on device k
+    rng: np.random.Generator
+
+    # Occupancy: device k is busy until time busy_until[k] (simulated seconds).
+    busy_until: np.ndarray = None  # (K,)
+
+    def __post_init__(self):
+        if self.busy_until is None:
+            self.busy_until = np.zeros(self.num_devices, dtype=np.float64)
+
+    # ---- constructors ----
+
+    @classmethod
+    def heterogeneous(
+        cls,
+        num_devices: int,
+        num_jobs: int,
+        seed: int = 0,
+        a_range=(2e-4, 2e-3),
+        mu_range=(1.0, 10.0),
+        data_range=(200, 600),
+    ) -> "DevicePool":
+        """Log-uniform capabilities — a 10x speed spread as in edge fleets."""
+        rng = np.random.default_rng(seed)
+        a = np.exp(rng.uniform(np.log(a_range[0]), np.log(a_range[1]), num_devices))
+        mu = rng.uniform(*mu_range, num_devices)
+        d = rng.integers(data_range[0], data_range[1], size=(num_devices, num_jobs))
+        return cls(a=a, mu=mu, data_sizes=d.astype(np.float64), rng=rng)
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.a.shape[0])
+
+    @property
+    def num_jobs(self) -> int:
+        return int(self.data_sizes.shape[1])
+
+    # ---- time model (Formula 4) ----
+
+    def expected_times(self, job: int, tau: float) -> np.ndarray:
+        """(K,) expected round time per device for job ``job``."""
+        d = self.data_sizes[:, job]
+        return tau * d * (self.a + 1.0 / self.mu)
+
+    def sample_times(self, job: int, tau: float, size: Optional[int] = None) -> np.ndarray:
+        """Sample realized times for all K devices (one round)."""
+        d = self.data_sizes[:, job]
+        shift = tau * self.a * d
+        scale = tau * d / self.mu
+        shape = (self.num_devices,) if size is None else (size, self.num_devices)
+        return shift + self.rng.exponential(1.0, size=shape) * scale
+
+    # ---- occupancy ----
+
+    def available_mask(self, now: float) -> np.ndarray:
+        """(K,) bool — devices free at simulated time ``now``."""
+        return self.busy_until <= now + 1e-12
+
+    def occupy(self, mask: np.ndarray, until: np.ndarray | float) -> None:
+        """Mark masked devices busy until ``until`` (scalar or per-device)."""
+        until = np.asarray(until, dtype=np.float64)
+        if until.ndim == 0:
+            until = np.full(self.num_devices, float(until))
+        self.busy_until = np.where(mask, np.maximum(self.busy_until, until), self.busy_until)
+
+    def fail(self, device_ids, until: float = np.inf) -> None:
+        """Fault injection: device(s) drop out until ``until`` (default forever)."""
+        mask = np.zeros(self.num_devices, dtype=bool)
+        mask[np.asarray(device_ids)] = True
+        self.occupy(mask, until)
+
+    def recover(self, device_ids) -> None:
+        self.busy_until[np.asarray(device_ids)] = 0.0

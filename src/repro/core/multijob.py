@@ -1,0 +1,265 @@
+"""Event-driven multi-job FL engine (the paper's Fig. 1 process).
+
+M jobs run in PARALLEL and asynchronously share the K-device pool: at any
+simulated instant a device belongs to at most one job. Each job round:
+
+  (1)-(2) the scheduler picks V_m^r from the currently-available devices,
+  (3)-(5) the scheduled devices run local training (their realized times are
+          sampled from the shifted-exponential model; the slowest defines the
+          round time, Formula 3),
+  (6)     the server aggregates (FedAvg) — executed by the pluggable
+          ``JobRuntime`` which performs REAL training on partitioned data,
+          exactly like the paper's GPU-simulated testbed (times simulated,
+          accuracy real).
+
+The engine keeps a completion-time heap; when a round finishes, the realized
+cost feeds back to the scheduler (BODS observation point / RLDS reward) and
+the next round of that job is scheduled at the release instant. Devices are
+released individually when THEIR local work ends (a fast device that
+finished uploading can immediately join another job).
+
+Fault tolerance: ``failure_rate`` drops each scheduled device with that
+probability mid-round; dropped devices are excluded from aggregation
+(FedAvg over survivors) and quarantined for ``failure_cooldown`` simulated
+seconds — the engine then proceeds, which is exactly how a production FL
+server must behave. Straggler mitigation: optional ``over_provision`` factor
+schedules extra devices and the round completes when n_sel have finished
+(deadline on the straggler tail).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.config.base import JobConfig
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+
+
+class JobRuntime(Protocol):
+    """Executes the real training for one round of one job."""
+
+    def run_round(self, job_id: int, device_ids: np.ndarray, round_idx: int
+                  ) -> Dict[str, float]:
+        """Train the scheduled devices locally + aggregate. Returns metrics
+        with at least {'loss': float, 'accuracy': float}."""
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    job: int
+    round_idx: int
+    t_start: float
+    t_end: float
+    round_time: float
+    cost: float
+    fairness: float
+    loss: float
+    accuracy: float
+    device_ids: np.ndarray
+    dropped: np.ndarray
+
+
+@dataclasses.dataclass
+class JobState:
+    config: JobConfig
+    round_idx: int = 0
+    done: bool = False
+    reached_target_at: Optional[float] = None
+    total_round_time: float = 0.0  # Σ_r T_m^r (Formula 6 numerator)
+
+
+class MultiJobEngine:
+    def __init__(
+        self,
+        jobs: Sequence[JobConfig],
+        pool: DevicePool,
+        cost_model: CostModel,
+        scheduler: SchedulerBase,
+        runtime: JobRuntime,
+        n_sel: Optional[int] = None,
+        failure_rate: float = 0.0,
+        failure_cooldown: float = 60.0,
+        over_provision: float = 1.0,
+        release_horizon: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        """``release_horizon``: the paper's appendix notes BODS/RLDS "consider
+        the probability to release the devices in V_o". With horizon h > 0, a
+        device freeing within h*time_scale is schedulable NOW; its remaining
+        busy time is added to its expected/realized round time (so a nearly-
+        free fast device can beat a free slow one). h = 0 is paper-faithful
+        strict availability."""
+        self.jobs = [JobState(config=j) for j in jobs]
+        self.pool = pool
+        self.cost_model = cost_model
+        self.scheduler = scheduler
+        self.runtime = runtime
+        self.n_sel = n_sel or max(1, int(round(0.1 * pool.num_devices)))
+        self.failure_rate = failure_rate
+        self.failure_cooldown = failure_cooldown
+        self.over_provision = over_provision
+        self.release_horizon = release_horizon
+        self.rng = rng or np.random.default_rng(12345)
+        self.counts = np.zeros((len(jobs), pool.num_devices))  # S_m (Formula 16)
+        self.records: List[RoundRecord] = []
+        self._heap: list = []
+        self._seq = 0
+        self._in_flight: Dict[int, dict] = {}
+
+    # ---- context assembly (Formula 8: other jobs' in-flight costs are context) ----
+
+    def _other_costs(self, job: int) -> float:
+        return float(sum(f["cost"] for m, f in self._in_flight.items() if m != job))
+
+    def _wait_times(self, now: float) -> np.ndarray:
+        return np.maximum(self.pool.busy_until - now, 0.0)
+
+    def _make_ctx(self, job: int, now: float) -> SchedulingContext:
+        js = self.jobs[job]
+        wait = self._wait_times(now)
+        horizon = self.release_horizon * self.cost_model.time_scale
+        return SchedulingContext(
+            job=job,
+            round_idx=js.round_idx,
+            tau=js.config.local_epochs,
+            n_sel=int(round(self.n_sel * self.over_provision)),
+            available=wait <= horizon + 1e-12,
+            counts=self.counts[job].copy(),
+            # Queueing-aware expected time: remaining busy time is part of the
+            # cost of picking a soon-to-free device.
+            expected_times=(self.pool.expected_times(job, js.config.local_epochs)
+                            + wait),
+            other_costs=self._other_costs(job),
+        )
+
+    # ---- schedule one round of one job at simulated time ``now`` ----
+
+    def _launch(self, job: int, now: float) -> None:
+        js = self.jobs[job]
+        ctx = self._make_ctx(job, now)
+        avail = int(ctx.available.sum())
+        if avail < ctx.n_sel:
+            # Not enough free devices: wait for the next release event.
+            nxt = np.partition(self.pool.busy_until[self.pool.busy_until > now],
+                               0)[0] if (self.pool.busy_until > now).any() else now + 1.0
+            heapq.heappush(self._heap, (float(nxt), self._seq, "retry", job))
+            self._seq += 1
+            return
+        plan = self.scheduler.schedule(ctx)
+        # Realized time includes any remaining busy time (release_horizon > 0).
+        times = self.pool.sample_times(job, js.config.local_epochs) + self._wait_times(now)
+        sel_ids = np.flatnonzero(plan)
+
+        # Straggler mitigation: with over-provisioning the round ends when the
+        # n_sel fastest of the scheduled set are done; the tail is dropped.
+        sel_times = times[sel_ids]
+        if len(sel_ids) > self.n_sel:
+            keep = sel_ids[np.argsort(sel_times)[: self.n_sel]]
+            dropped_straggler = np.setdiff1d(sel_ids, keep)
+        else:
+            keep, dropped_straggler = sel_ids, np.array([], dtype=int)
+
+        # Fault injection: each participating device fails with failure_rate.
+        fail_mask = self.rng.random(len(keep)) < self.failure_rate
+        failed = keep[fail_mask]
+        survivors = keep[~fail_mask]
+        if survivors.size == 0:  # pathological: everyone failed; keep one
+            survivors, failed = keep[:1], keep[1:]
+
+        round_time = float(times[survivors].max())
+        t_end = now + round_time
+        # Devices are busy until THEIR OWN finish time (then free for other jobs).
+        per_dev_busy = np.full(self.pool.num_devices, 0.0)
+        per_dev_busy[sel_ids] = now + times[sel_ids]
+        per_dev_busy[failed] = t_end + self.failure_cooldown  # quarantine
+        busy_mask = np.zeros(self.pool.num_devices, dtype=bool)
+        busy_mask[sel_ids] = True
+        self.pool.occupy(busy_mask, per_dev_busy)
+
+        cm = self.cost_model
+        fairness = cm.fairness(self.counts[job], plan)  # paper Formula 5 (absolute, recorded)
+        dfair = fairness - cm.fairness(self.counts[job]) if cm.delta_fairness else fairness
+        # Realized cost (scheduler feedback): realized straggler time + fairness.
+        cost = float(cm.alpha * round_time / cm.time_scale
+                     + cm.beta * dfair / cm.fairness_scale)
+
+        self._in_flight[job] = dict(
+            plan=plan, survivors=survivors, failed=failed,
+            dropped=np.concatenate([dropped_straggler, failed]),
+            t_start=now, cost=cost, fairness=fairness, round_time=round_time,
+            ctx=ctx,
+        )
+        heapq.heappush(self._heap, (float(t_end), self._seq, "finish", job))
+        self._seq += 1
+
+    # ---- round completion ----
+
+    def _finish(self, job: int, now: float) -> bool:
+        js = self.jobs[job]
+        f = self._in_flight.pop(job)
+        metrics = self.runtime.run_round(job, f["survivors"], js.round_idx)
+        self.counts[job][f["survivors"]] += 1.0  # Formula 16
+
+        self.records.append(RoundRecord(
+            job=job, round_idx=js.round_idx, t_start=f["t_start"], t_end=now,
+            round_time=f["round_time"], cost=f["cost"], fairness=f["fairness"],
+            loss=metrics["loss"], accuracy=metrics["accuracy"],
+            device_ids=f["survivors"], dropped=f["dropped"]))
+
+        self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
+        js.total_round_time += f["round_time"]
+        js.round_idx += 1
+
+        reached = metrics["accuracy"] >= js.config.target_metric
+        if reached and js.reached_target_at is None:
+            js.reached_target_at = now
+        if reached or js.round_idx >= js.config.max_rounds:
+            js.done = True
+        return js.done
+
+    # ---- main loop ----
+
+    def run(self, verbose: bool = False,
+            on_round: Optional[Callable[[RoundRecord], None]] = None) -> List[RoundRecord]:
+        for m in range(len(self.jobs)):
+            self._launch(m, 0.0)
+        while self._heap:
+            now, _, kind, job = heapq.heappop(self._heap)
+            if kind == "retry":
+                self._launch(job, now)
+                continue
+            done = self._finish(job, now)
+            if on_round is not None:
+                on_round(self.records[-1])
+            if verbose:
+                r = self.records[-1]
+                print(f"[t={now:9.1f}s] job{job} r{r.round_idx} "
+                      f"acc={r.accuracy:.4f} loss={r.loss:.4f} T={r.round_time:.1f}s")
+            if not done:
+                self._launch(job, now)
+        return self.records
+
+    # ---- summary (paper Tables 1/2/5 quantities) ----
+
+    def summary(self) -> Dict[str, dict]:
+        out = {}
+        for m, js in enumerate(self.jobs):
+            recs = [r for r in self.records if r.job == m]
+            key = js.config.model.name
+            if key in out:
+                key = f"{key}#{m}"
+            out[key] = dict(
+                rounds=js.round_idx,
+                final_accuracy=recs[-1].accuracy if recs else 0.0,
+                best_accuracy=max((r.accuracy for r in recs), default=0.0),
+                time_to_target=js.reached_target_at,
+                total_round_time=js.total_round_time,
+                makespan=recs[-1].t_end if recs else 0.0,
+            )
+        return out

@@ -1,0 +1,57 @@
+"""Scheduling-plan representation and invariants.
+
+A plan is a boolean vector over the K devices with exactly ``n_sel`` True
+entries, all of which must be available (not occupied by another job).
+These invariants are property-tested in tests/test_schedulers.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def empty_plan(num_devices: int) -> np.ndarray:
+    return np.zeros(num_devices, dtype=bool)
+
+
+def plan_from_indices(num_devices: int, idx) -> np.ndarray:
+    p = empty_plan(num_devices)
+    p[np.asarray(idx, dtype=int)] = True
+    return p
+
+
+def random_plans(
+    rng: np.random.Generator, available: np.ndarray, n_sel: int, count: int
+) -> np.ndarray:
+    """(count, K) random valid plans drawn from the available set."""
+    avail_idx = np.flatnonzero(available)
+    if avail_idx.size < n_sel:
+        raise ValueError(f"need {n_sel} available devices, have {avail_idx.size}")
+    plans = np.zeros((count, available.shape[0]), dtype=bool)
+    for i in range(count):
+        sel = rng.choice(avail_idx, size=n_sel, replace=False)
+        plans[i, sel] = True
+    return plans
+
+
+def validate_plan(plan: np.ndarray, available: np.ndarray, n_sel: int) -> None:
+    assert plan.dtype == bool and plan.ndim == 1
+    assert int(plan.sum()) == n_sel, (int(plan.sum()), n_sel)
+    assert not np.any(plan & ~available), "plan uses occupied device(s)"
+
+
+def repair_plan(
+    rng: np.random.Generator, plan: np.ndarray, available: np.ndarray, n_sel: int
+) -> np.ndarray:
+    """Force a candidate onto the feasible set: drop occupied, fix cardinality."""
+    p = plan & available
+    n = int(p.sum())
+    if n > n_sel:  # drop random extras
+        on = np.flatnonzero(p)
+        off = rng.choice(on, size=n - n_sel, replace=False)
+        p[off] = False
+    elif n < n_sel:  # top up from available complement
+        free = np.flatnonzero(available & ~p)
+        add = rng.choice(free, size=n_sel - n, replace=False)
+        p[add] = True
+    return p

@@ -1,0 +1,53 @@
+"""Device schedulers for multi-job FL.
+
+Paper methods: BODS (Bayesian optimization), RLDS (reinforcement learning).
+Paper baselines: Random, FedCS, Greedy, Genetic (+ appendix: SimulatedAnnealing).
+"""
+
+from typing import Dict, Type
+
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.core.schedulers.random_sched import RandomScheduler
+from repro.core.schedulers.greedy import GreedyScheduler
+from repro.core.schedulers.fedcs import FedCSScheduler
+from repro.core.schedulers.genetic import GeneticScheduler
+from repro.core.schedulers.simulated_annealing import SimulatedAnnealingScheduler
+from repro.core.schedulers.bods import BODSScheduler
+from repro.core.schedulers.dnn import DNNScheduler
+from repro.core.schedulers.rlds import RLDSScheduler
+
+_SCHEDULERS: Dict[str, Type[SchedulerBase]] = {
+    "random": RandomScheduler,
+    "greedy": GreedyScheduler,
+    "fedcs": FedCSScheduler,
+    "genetic": GeneticScheduler,
+    "sa": SimulatedAnnealingScheduler,
+    "dnn": DNNScheduler,
+    "bods": BODSScheduler,
+    "rlds": RLDSScheduler,
+}
+
+
+def get_scheduler(name: str, **kwargs) -> SchedulerBase:
+    if name not in _SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; known: {sorted(_SCHEDULERS)}")
+    return _SCHEDULERS[name](**kwargs)
+
+
+def list_schedulers():
+    return sorted(_SCHEDULERS)
+
+
+__all__ = [
+    "SchedulerBase",
+    "SchedulingContext",
+    "get_scheduler",
+    "list_schedulers",
+    "RandomScheduler",
+    "GreedyScheduler",
+    "FedCSScheduler",
+    "GeneticScheduler",
+    "SimulatedAnnealingScheduler",
+    "BODSScheduler",
+    "RLDSScheduler",
+]

@@ -1,0 +1,70 @@
+"""Scheduler interface (Formula 9): pick V_m^r ⊂ K \\ V_o minimizing TotalCost."""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cost import CostModel
+
+
+@dataclasses.dataclass
+class SchedulingContext:
+    """Everything a scheduler may look at when planning one round of one job."""
+
+    job: int                    # index m of the job being scheduled
+    round_idx: int              # r
+    tau: float                  # local epochs tau_m
+    n_sel: int                  # |V_m^r| = C_m * |K|
+    available: np.ndarray       # (K,) bool — K \ V_o at this instant
+    counts: np.ndarray          # (K,) s_{k,m}: cumulative scheduling frequency of job m
+    expected_times: np.ndarray  # (K,) E[t_m^k] from the pool's time model
+    other_costs: float = 0.0    # sum of other jobs' in-flight round costs (Formula 8)
+    # Observed realized cost of the previous round of this job (schedulers that
+    # learn online — BODS, RLDS — consume this as feedback).
+    last_plan: Optional[np.ndarray] = None
+    last_cost: Optional[float] = None
+
+
+class SchedulerBase(abc.ABC):
+    """Stateful per-experiment scheduler. One instance schedules ALL jobs."""
+
+    name: str = "base"
+
+    def __init__(self, cost_model: CostModel, seed: int = 0):
+        self.cost_model = cost_model
+        self.rng = np.random.default_rng(seed)
+
+    @abc.abstractmethod
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        """Return a (K,) bool plan with exactly ctx.n_sel devices, all available."""
+
+    def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
+        """Feedback after the round really ran (default: no-op)."""
+
+    # Shared helper: batch-estimate candidate TotalCosts under the context.
+    def _cost_of(self, ctx: SchedulingContext, plans: np.ndarray) -> np.ndarray:
+        return self.cost_model.total_cost_batch(
+            job=ctx.job,
+            tau=ctx.tau,
+            counts=ctx.counts,
+            plans=plans,
+            other_costs=ctx.other_costs,
+            times=ctx.expected_times,
+        )
+
+    # Own-job estimated cost (no cross-job constant): comparable to the
+    # engine's realized-cost feedback, so learned schedulers can form
+    # realized-estimated residuals that are stationary across rounds.
+    def _own_cost_of(self, ctx: SchedulingContext, plans: np.ndarray) -> np.ndarray:
+        return self.cost_model.total_cost_batch(
+            job=ctx.job,
+            tau=ctx.tau,
+            counts=ctx.counts,
+            plans=plans,
+            other_costs=0.0,
+            times=ctx.expected_times,
+        )

@@ -1,0 +1,91 @@
+"""DNN-based scheduling baseline (paper appendix: Zang et al. 2019).
+
+A small MLP regresses realized cost from plan features; each round the
+scheduler picks the argmin predicted cost among sampled candidates
+(exploitation) with epsilon-greedy random exploration. The paper reports this
+class of method underperforms BODS/RLDS (up to 90.5% slower, 26.3% lower
+accuracy) — included to reproduce that comparison.
+
+Pure JAX: the MLP trains online by SGD on (features, realized cost) pairs
+from a fixed-size ring buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plans import random_plans
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.core.schedulers.bods import NUM_FEATURES
+
+BUF = 256
+HIDDEN = 32
+
+
+def _init_mlp(rng: np.random.Generator):
+    def g(shape):
+        return jnp.asarray(rng.normal(0, np.sqrt(2.0 / sum(shape)), shape), jnp.float32)
+
+    return {"w1": g((NUM_FEATURES, HIDDEN)), "b1": jnp.zeros((HIDDEN,)),
+            "w2": g((HIDDEN, HIDDEN)), "b2": jnp.zeros((HIDDEN,)),
+            "w3": g((HIDDEN, 1)), "b3": jnp.zeros((1,))}
+
+
+@jax.jit
+def _mlp(params, f):
+    h = jax.nn.relu(f @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return (h @ params["w3"] + params["b3"])[..., 0]
+
+
+@jax.jit
+def _sgd_step(params, feats, targets, valid, lr):
+    def loss(p):
+        pred = _mlp(p, feats)
+        return jnp.sum(jnp.square(pred - targets) * valid) / jnp.maximum(valid.sum(), 1.0)
+
+    g = jax.grad(loss)(params)
+    return jax.tree_util.tree_map(lambda p_, g_: p_ - lr * g_, params, g)
+
+
+class DNNScheduler(SchedulerBase):
+    name = "dnn"
+
+    def __init__(self, cost_model, seed: int = 0, num_candidates: int = 256,
+                 epsilon: float = 0.1, lr: float = 1e-2, train_steps: int = 4):
+        super().__init__(cost_model, seed)
+        self.num_candidates = num_candidates
+        self.epsilon = epsilon
+        self.lr = lr
+        self.train_steps = train_steps
+        self.params = _init_mlp(self.rng)
+        self._F = np.zeros((BUF, NUM_FEATURES), np.float32)
+        self._y = np.zeros(BUF, np.float32)
+        self._valid = np.zeros(BUF, np.float32)
+        self._head = 0
+
+    def _featurize(self, ctx, plans):
+        from repro.core.schedulers.bods import BODSScheduler
+        return BODSScheduler._featurize(self, ctx, plans)  # shared feature map
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        cands = random_plans(self.rng, ctx.available, ctx.n_sel, self.num_candidates)
+        if self.rng.random() < self.epsilon or self._valid.sum() < 8:
+            return cands[self.rng.integers(0, len(cands))]
+        feats = self._featurize(ctx, cands)
+        pred = np.asarray(_mlp(self.params, jnp.asarray(feats)))
+        return cands[int(np.argmin(pred))]
+
+    def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
+        f = self._featurize(ctx, plan[None])[0]
+        i = self._head % BUF
+        self._F[i] = f
+        self._y[i] = realized_cost
+        self._valid[i] = 1.0
+        self._head += 1
+        for _ in range(self.train_steps):
+            self.params = _sgd_step(self.params, jnp.asarray(self._F),
+                                    jnp.asarray(self._y), jnp.asarray(self._valid),
+                                    jnp.asarray(self.lr, jnp.float32))

@@ -1,0 +1,34 @@
+"""FedCS (Nishio & Yonetani 2019) adapted to multi-job FL.
+
+FedCS greedily accepts clients under a round deadline, visiting them in a
+RANDOM order (which is where its partial fairness comes from), and keeps the
+plan within the deadline budget. If fewer than n_sel fit the deadline, the
+deadline is relaxed; if more fit, the first n_sel accepted are kept.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import plan_from_indices
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+
+
+class FedCSScheduler(SchedulerBase):
+    name = "fedcs"
+
+    def __init__(self, cost_model, seed: int = 0, deadline_quantile: float = 0.6):
+        super().__init__(cost_model, seed)
+        self.deadline_quantile = deadline_quantile
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        avail = np.flatnonzero(ctx.available)
+        times = ctx.expected_times
+        deadline = np.quantile(times[avail], self.deadline_quantile)
+        order = self.rng.permutation(avail)
+        chosen = [k for k in order if times[k] <= deadline][: ctx.n_sel]
+        if len(chosen) < ctx.n_sel:  # relax: admit the fastest remaining
+            rest = [k for k in order if k not in set(chosen)]
+            rest.sort(key=lambda k: times[k])
+            chosen += rest[: ctx.n_sel - len(chosen)]
+        return plan_from_indices(ctx.available.shape[0], chosen)

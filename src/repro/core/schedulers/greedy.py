@@ -1,0 +1,21 @@
+"""Greedy scheduling (Shi, Zhou, Niu 2020): fastest available devices first.
+
+The paper observes this maximizes per-round speed but starves slow devices'
+data (poor fairness) -> accuracy collapse on non-IID. Kept faithful.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import plan_from_indices
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+
+
+class GreedyScheduler(SchedulerBase):
+    name = "greedy"
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        times = np.where(ctx.available, ctx.expected_times, np.inf)
+        idx = np.argsort(times, kind="stable")[: ctx.n_sel]
+        return plan_from_indices(ctx.available.shape[0], idx)

@@ -1,0 +1,15 @@
+"""Random scheduling — FedAvg's device selection (McMahan et al. 2017b)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import random_plans
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+
+
+class RandomScheduler(SchedulerBase):
+    name = "random"
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        return random_plans(self.rng, ctx.available, ctx.n_sel, 1)[0]

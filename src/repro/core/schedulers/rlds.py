@@ -1,0 +1,239 @@
+"""RLDS — Reinforcement Learning-based Device Scheduling (paper Algorithm 2).
+
+Architecture (paper Fig. 2): an LSTM over the device sequence followed by a
+fully-connected head emits a per-device scheduling probability; an ε-greedy
+policy converter turns probabilities into a plan of exactly n_sel devices.
+Training is REINFORCE (paper Formula 12) with an EMA baseline b_m per job:
+
+    θ' = θ + η/N Σ_n Σ_k ∇ log P(S_k | S_{k-1:1}; θ) (R_n - b_m)
+
+with reward R = -TotalCost. The policy is shared across jobs ("learns the
+sharing relationship of devices among diverse jobs"); per-device features:
+[a_k, μ_k, E[t_k] (job-specific), fairness count s_{k,m}, availability,
+D_k^m]. Pre-training (paper Algorithm 3) runs at construction against the
+estimated cost model with N plans per synthetic round.
+
+All policy math is jitted JAX; the LSTM is a lax.scan over the K devices.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plans import repair_plan
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.optim import adamw
+
+NUM_FEATURES = 6
+HIDDEN = 64
+
+
+def _init_policy(rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+    def glorot(shape):
+        fan = sum(shape)
+        return jnp.asarray(rng.normal(0, np.sqrt(2.0 / fan), shape), jnp.float32)
+
+    return {
+        "wi": glorot((NUM_FEATURES, 4 * HIDDEN)),   # input -> gates
+        "wh": glorot((HIDDEN, 4 * HIDDEN)),          # hidden -> gates
+        "b": jnp.zeros((4 * HIDDEN,), jnp.float32),
+        "w_out": glorot((HIDDEN, 1)),
+        "b_out": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _policy_logits(params, feats):
+    """feats: (K, F) -> logits (K,). LSTM scan over the device sequence."""
+
+    def cell(carry, x):
+        h, c = carry
+        gates = x @ params["wi"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((HIDDEN,), jnp.float32)
+    (_, _), hs = jax.lax.scan(cell, (h0, h0), feats)
+    return (hs @ params["w_out"] + params["b_out"])[:, 0]
+
+
+def _logprob(params, feats, plan, available):
+    """Paper Formula 12: Σ_{k ∈ V} log P(S_k | S_{k-1:1}; θ) — the sum runs over
+    the SELECTED devices only (not the Bernoulli complement: with n_sel << K the
+    ~K unselected terms would swamp the selected ones and collapse the policy)."""
+    logits = _policy_logits(params, feats)
+    logp = jax.nn.log_sigmoid(logits)
+    return jnp.sum(jnp.where(plan > 0, logp, 0.0) * available)
+
+
+@jax.jit
+def _reinforce_grads(params, feats_batch, plans_batch, avail_batch, advantages):
+    """Mean REINFORCE gradient over N (plan, advantage) samples.
+
+    A small logit L2 keeps the policy away from saturation: REINFORCE's
+    per-plan gradient magnitude Σ_k (1 - p_k) correlates with the plan's
+    exploration content (and hence its reward), which otherwise drifts all
+    logits downward until the sigmoid saturates.
+    """
+
+    def loss(p):
+        lps = jax.vmap(lambda f, pl, av: _logprob(p, f, pl, av))(
+            feats_batch, plans_batch, avail_batch)
+        logits = jax.vmap(lambda f: _policy_logits(p, f))(feats_batch)
+        return -jnp.mean(lps * advantages) + 1e-2 * jnp.mean(jnp.square(logits))
+
+    return jax.grad(loss)(params)
+
+
+@jax.jit
+def _probs(params, feats):
+    return jax.nn.sigmoid(_policy_logits(params, feats))
+
+
+class RLDSScheduler(SchedulerBase):
+    name = "rlds"
+
+    def __init__(self, cost_model, seed: int = 0, lr: float = 1e-2,
+                 epsilon: float = 0.1, gamma: float = 0.1,
+                 pretrain_rounds: int = 300, pretrain_plans: int = 8):
+        super().__init__(cost_model, seed)
+        self.epsilon = epsilon
+        self.gamma = gamma  # EMA factor for the baseline b_m (paper Line 7)
+        self.params = _init_policy(self.rng)
+        self._opt_init, self._opt_update = adamw(lr, 0.9, 0.999, 1e-8, 0.0)
+        self.opt_state = self._opt_init(self.params)
+        # Baselines b_m start unset; the first observed reward initializes them
+        # (a zero init against rewards ≈ -cost << 0 yields huge early advantages).
+        self.baselines = np.full(cost_model.pool.num_jobs, np.nan)
+        self._adv_scale = 1.0  # running |advantage| normalizer
+        self._pretrain(pretrain_rounds, pretrain_plans)
+
+    # ---- features ----
+
+    def _features(self, ctx: SchedulingContext) -> np.ndarray:
+        pool = self.cost_model.pool
+        t = ctx.expected_times
+        f = np.stack([
+            pool.a / pool.a.max(),
+            pool.mu / pool.mu.max(),
+            t / (t.max() + 1e-12),
+            ctx.counts / (ctx.counts.max() + 1.0),
+            ctx.available.astype(np.float64),
+            pool.data_sizes[:, ctx.job] / pool.data_sizes.max(),
+        ], axis=1)
+        return f.astype(np.float32)
+
+    # ---- policy converter (ε-greedy) ----
+
+    def _convert(self, probs: np.ndarray, ctx: SchedulingContext,
+                 explore: bool) -> np.ndarray:
+        """ε-greedy policy converter (paper Fig. 2).
+
+        explore=True samples the plan from the policy itself via Gumbel top-k
+        over the logits (Plackett-Luce without replacement) — proper on-policy
+        visitation that cannot lock onto a sticky top-k set — then applies the
+        ε-greedy random swap on top. explore=False is the deterministic top-k.
+        """
+        K = ctx.available.shape[0]
+        logits = np.log(np.clip(probs, 1e-9, 1 - 1e-9)) - np.log(
+            np.clip(1 - probs, 1e-9, 1.0))
+        score = np.where(ctx.available, logits, -np.inf)
+        if explore:
+            score = score + self.rng.gumbel(size=K)
+        plan = np.zeros(K, dtype=bool)
+        plan[np.argsort(-score, kind="stable")[: ctx.n_sel]] = True
+        if explore:
+            free = np.flatnonzero(ctx.available & ~plan)
+            on = np.flatnonzero(plan)
+            for k in on:
+                if free.size and self.rng.random() < self.epsilon:
+                    swap = self.rng.choice(free)
+                    plan[k] = False
+                    plan[swap] = True
+                    free = np.flatnonzero(ctx.available & ~plan)
+        return repair_plan(self.rng, plan, ctx.available, ctx.n_sel)
+
+    # ---- Algorithm 2 ----
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        feats = self._features(ctx)
+        probs = np.asarray(_probs(self.params, jnp.asarray(feats)))
+        # Annealed ε-greedy: exploration is front-loaded; late-round random
+        # swaps only slow convergence once the policy has settled.
+        eps_now = self.epsilon / (1.0 + ctx.round_idx / 50.0)
+        old_eps, self.epsilon = self.epsilon, eps_now
+        plan = self._convert(probs, ctx, explore=True)
+        self.epsilon = old_eps
+        self._last_feats = feats
+        return plan
+
+    def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
+        reward = -realized_cost
+        if np.isnan(self.baselines[ctx.job]):
+            self.baselines[ctx.job] = reward
+        adv = self._norm_adv(reward - self.baselines[ctx.job])
+        self._update(
+            feats=self._last_feats[None],
+            plans=plan[None].astype(np.float32),
+            avail=ctx.available[None].astype(np.float32),
+            advantages=np.array([adv], np.float32),
+        )
+        self.baselines[ctx.job] = (
+            (1 - self.gamma) * self.baselines[ctx.job] + self.gamma * reward)
+
+    def _norm_adv(self, adv):
+        """Running-scale advantage normalization (variance control, Formula 12's
+        b_m does the centering; this bounds the magnitude)."""
+        a = np.asarray(adv, np.float64)
+        self._adv_scale = 0.95 * self._adv_scale + 0.05 * float(np.mean(np.abs(a)) + 1e-8)
+        return a / max(self._adv_scale, 1e-6)
+
+    def _update(self, feats, plans, avail, advantages):
+        grads = _reinforce_grads(
+            self.params, jnp.asarray(feats), jnp.asarray(plans),
+            jnp.asarray(avail), jnp.asarray(advantages))
+        updates, self.opt_state = self._opt_update(grads, self.opt_state, self.params)
+        self.params = jax.tree_util.tree_map(lambda p, u: p + u, self.params, updates)
+
+    # ---- Algorithm 3: pre-training against the estimated cost model ----
+
+    def _pretrain(self, rounds: int, n_plans: int) -> None:
+        pool = self.cost_model.pool
+        K, M = pool.num_devices, pool.num_jobs
+        counts = np.zeros((M, K))
+        n_sel = max(1, K // 10)
+        for r in range(rounds):
+            m = r % M
+            tau = 5.0
+            ctx = SchedulingContext(
+                job=m, round_idx=r, tau=tau, n_sel=n_sel,
+                available=np.ones(K, dtype=bool), counts=counts[m],
+                expected_times=pool.expected_times(m, tau))
+            feats = self._features(ctx)
+            probs = np.asarray(_probs(self.params, jnp.asarray(feats)))
+            plans = np.stack([self._convert(probs, ctx, explore=True)
+                              for _ in range(n_plans)])
+            costs = self._own_cost_of(ctx, plans)
+            rewards = -costs
+            if np.isnan(self.baselines[m]):
+                self.baselines[m] = float(rewards.mean())
+            # Batch standardization (on top of the EMA baseline): kills the
+            # reward/gradient-magnitude correlation that collapses the policy.
+            adv = rewards - rewards.mean()
+            adv = adv / (adv.std() + 1e-8)
+            self._update(
+                feats=np.repeat(feats[None], n_plans, 0),
+                plans=plans.astype(np.float32),
+                avail=np.repeat(ctx.available[None].astype(np.float32), n_plans, 0),
+                advantages=adv.astype(np.float32),
+            )
+            self.baselines[m] = ((1 - self.gamma) * self.baselines[m]
+                                 + self.gamma * float(rewards.mean()))
+            best = plans[int(np.argmin(costs))]
+            counts[m] += best

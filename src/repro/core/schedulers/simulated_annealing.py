@@ -1,0 +1,44 @@
+"""Simulated annealing baseline (paper appendix comparison).
+
+Neighborhood move: swap one selected device with one free device. Geometric
+cooling. Fitness = estimated TotalCost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plans import random_plans
+from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+
+
+class SimulatedAnnealingScheduler(SchedulerBase):
+    name = "sa"
+
+    def __init__(self, cost_model, seed: int = 0, steps: int = 200,
+                 t0: float = 1.0, cooling: float = 0.97):
+        super().__init__(cost_model, seed)
+        self.steps = steps
+        self.t0 = t0
+        self.cooling = cooling
+
+    def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        cur = random_plans(self.rng, ctx.available, ctx.n_sel, 1)[0]
+        cur_cost = float(self._cost_of(ctx, cur[None])[0])
+        best, best_cost = cur.copy(), cur_cost
+        temp = self.t0
+        for _ in range(self.steps):
+            nxt = cur.copy()
+            on = np.flatnonzero(nxt)
+            off = np.flatnonzero(ctx.available & ~nxt)
+            if not off.size:
+                break
+            nxt[self.rng.choice(on)] = False
+            nxt[self.rng.choice(off)] = True
+            nxt_cost = float(self._cost_of(ctx, nxt[None])[0])
+            if nxt_cost < cur_cost or self.rng.random() < np.exp(-(nxt_cost - cur_cost) / max(temp, 1e-9)):
+                cur, cur_cost = nxt, nxt_cost
+                if cur_cost < best_cost:
+                    best, best_cost = cur.copy(), cur_cost
+            temp *= self.cooling
+        return best

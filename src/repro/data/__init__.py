@@ -1,0 +1,15 @@
+"""Data pipelines: synthetic class-prototype image sets (offline container —
+no CIFAR/MNIST downloads), LM token streams, and sharding-aware batching."""
+
+from repro.data.synthetic import (
+    make_classification_dataset,
+    make_lm_tokens,
+)
+from repro.data.pipeline import Batcher, host_local_batches
+
+__all__ = [
+    "make_classification_dataset",
+    "make_lm_tokens",
+    "Batcher",
+    "host_local_batches",
+]

@@ -1,0 +1,14 @@
+"""Federated substrate: partitioning, vmap'd local training, FedAvg, runtimes."""
+
+from repro.fl.partition import iid_partition, noniid_partition
+from repro.fl.aggregation import fedavg, fedavg_compressed
+from repro.fl.runtime import FLJobRuntime, SyntheticRuntime
+
+__all__ = [
+    "iid_partition",
+    "noniid_partition",
+    "fedavg",
+    "fedavg_compressed",
+    "FLJobRuntime",
+    "SyntheticRuntime",
+]

@@ -1,0 +1,54 @@
+"""Server-side aggregation.
+
+``fedavg``: data-size-weighted average of device models (McMahan 2017),
+operating on a pytree whose leaves carry a leading device axis (the output of
+the vmap'd local trainer). ``fedavg_compressed`` aggregates top-k sparsified
+deltas with server-side decompression — the FL-plane gradient-compression
+path.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import topk_compress, topk_decompress
+
+PyTree = Any
+
+
+def fedavg(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
+    """weights: (n_devices,) — normalized inside."""
+    w = weights / jnp.maximum(weights.sum(), 1e-12)
+
+    def avg(leaf):
+        wshape = (-1,) + (1,) * (leaf.ndim - 1)
+        return jnp.sum(leaf * w.reshape(wshape), axis=0)
+
+    return jax.tree_util.tree_map(avg, stacked_params)
+
+
+def fedavg_compressed(global_params: PyTree, stacked_params: PyTree,
+                      weights: jnp.ndarray, ratio: float) -> PyTree:
+    """Devices upload top-k sparsified DELTAS; the server averages them.
+
+    Equivalent communication model to production FL compression; the return
+    is the new global model.
+    """
+    n = weights.shape[0]
+    w = weights / jnp.maximum(weights.sum(), 1e-12)
+
+    def one_device(i):
+        delta = jax.tree_util.tree_map(
+            lambda s, g: s[i] - g, stacked_params, global_params)
+        (vals, idx), _ = topk_compress(delta, ratio)
+        return topk_decompress(vals, idx, global_params)
+
+    agg = one_device(0)
+    agg = jax.tree_util.tree_map(lambda d: d * w[0], agg)
+    for i in range(1, n):
+        d_i = one_device(i)
+        agg = jax.tree_util.tree_map(lambda a, d: a + d * w[i], agg, d_i)
+    return jax.tree_util.tree_map(lambda g, d: g + d, global_params, agg)

@@ -1,0 +1,92 @@
+"""Decode attention Pallas kernel: one new token vs a long KV cache.
+
+Decode is memory-bound: the whole KV cache streams through VMEM once per
+step. Grid (B, KV, T/BK), KV-block axis innermost; the G = H/KV queries that
+share a kv-head ride together as a (G, D) tile so the cache is read ONCE per
+kv-head (the GQA bandwidth win — a per-q-head layout would read it G times).
+Online softmax in f32 scratch, masked by the per-sequence ``length``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int, n_k: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                       # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                    # (BK, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)                    # (BK, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale           # (G, BK)
+
+    t_pos = ti * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    valid = t_pos < len_ref[0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ti == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray, block_k: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B,H,D); caches: (B,T,KV,D); length: (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(block_k, T)
+    while T % bk:
+        bk //= 2
+    grid = (B, KV, T // bk)
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KV, G, D)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=bk, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, t: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,140 @@
+"""Flash attention (fwd) Pallas TPU kernel with GQA, causal and
+sliding-window masking.
+
+Online-softmax tiling (Dao et al., adapted to the TPU grid model): grid
+(B, H, S/BQ, S/BK) with the KV-block axis INNERMOST — TPU executes the grid
+sequentially minor-to-major, so the running max m, normalizer l, and f32
+output accumulator live in VMEM scratch across the KV sweep and flush once
+per Q tile. GQA is pure indexing: the k/v BlockSpec index_map sends q-head h
+to kv-head h // (H // KV) — no head replication in HBM.
+
+VMEM budget per step: q (BQ, D) + k,v (BK, D) + acc (BQ, D) f32 + logits
+(BQ, BK) f32 ≈ 0.6 MB at BQ=BK=512, D=128 — far under the ~16 MB/core VMEM,
+leaving room for the double-buffered pipeline.
+
+Backward falls back to the jnp reference via custom_vjp: training still
+differentiates, the paper's contribution is not a bwd kernel, and §Perf
+tracks the fwd path (prefill/serving) where this kernel lands.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, n_k: int,
+                  causal: bool, window: Optional[int]):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (BK, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(logits, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    grid = (B, H, S // bq, S // bk)
+    scale = 1.0 / (D ** 0.5)
+
+    # (B,S,H,D) -> (B,H,S,D) layout for clean (S, D) tiles
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=bq, block_k=bk,
+                          n_k=grid[3], causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, block_q, block_k, interpret):
+    return _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret)
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    return _flash(q, k, v, causal, window, block_q, block_k, interpret), (q, k, v)
+
+
+def _flash_vjp_bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref.attention(q_, k_, v_, causal=causal,
+                                                       window=window), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B,S,H,D); k,v: (B,S,KV,D) -> (B,S,H,D)."""
+    return _flash(q, k, v, causal, window, block_q, block_k, interpret)

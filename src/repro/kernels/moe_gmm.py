@@ -1,0 +1,64 @@
+"""Grouped expert matmul (MoE) Pallas kernel.
+
+xg: (E, C, din) bucketed tokens; wg: (E, din, dout) expert weights
+-> (E, C, dout). Grid (E, C/BC, dout/BD, din/BK): the din axis is the
+innermost (sequential) grid dim, accumulating partial products into an f32
+VMEM scratch tile and flushing on the last k-step — the canonical TPU MXU
+tiling (every tile dim a multiple of 128 where shapes allow).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _tile(n: int, target: int) -> int:
+    t = min(target, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_k",
+                                             "interpret"))
+def moe_gmm(xg: jnp.ndarray, wg: jnp.ndarray, block_c: int = 128,
+            block_d: int = 256, block_k: int = 512,
+            interpret: bool = False) -> jnp.ndarray:
+    E, C, din = xg.shape
+    dout = wg.shape[-1]
+    bc = _tile(C, block_c)
+    bd = _tile(dout, block_d)
+    bk = _tile(din, block_k)
+    grid = (E, C // bc, dout // bd, din // bk)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, n_k=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bd), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, dout), xg.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(xg, wg)

@@ -1,0 +1,85 @@
+"""Kernel dispatch: jit-ready wrappers selecting Pallas / interpret / ref.
+
+``set_default_impl`` flips the whole model zoo between the pure-jnp reference
+path (CPU tests + dry-run) and the Pallas TPU kernels. Individual calls can
+override via ``impl=``. ``interpret`` runs the Pallas kernel body in Python
+on CPU — the validation mode used by tests/test_kernels_*.py.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+_state = threading.local()
+VALID = ("ref", "pallas", "interpret")
+
+
+def set_default_impl(impl: str) -> None:
+    assert impl in VALID, impl
+    _state.impl = impl
+
+
+def get_default_impl() -> str:
+    return getattr(_state, "impl", "ref")
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl if impl is not None else get_default_impl()
+
+
+def attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+              impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.attention(q, k, v, causal=causal, window=window)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, length, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attention(q, k_cache, v_cache, length)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k_cache, v_cache, length,
+                               interpret=(impl == "interpret"))
+
+
+def moe_gmm(xg, wg, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.moe_gmm(xg, wg)
+    from repro.kernels import moe_gmm as gmm
+    return gmm.moe_gmm(xg, wg, interpret=(impl == "interpret"))
+
+
+def linear_scan(q, k, v, decay, init_state=None, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        # Chunked form by default (§Perf H1): identical math, O(S/Lc) state
+        # round-trips. The sequential oracle stays in ref.linear_scan.
+        if init_state is None:
+            return _ref.linear_scan_chunked(q, k, v, decay)
+        return _ref.linear_scan(q, k, v, decay, init_state)
+    from repro.kernels import ssm_scan as ss
+    return ss.linear_scan(q, k, v, decay, init_state,
+                          interpret=(impl == "interpret"))
+
+
+def linear_scan_step(q, k, v, decay, state):
+    # Decode steps are O(1) work: the ref path is already optimal (no kernel).
+    return _ref.linear_scan_step(q, k, v, decay, state)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.rmsnorm(x, scale, eps)
+    from repro.kernels import rmsnorm as rn
+    return rn.rmsnorm(x, scale, eps, interpret=(impl == "interpret"))

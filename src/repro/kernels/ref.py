@@ -1,0 +1,239 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the semantics contract: each Pallas kernel must match its oracle to
+tolerance across the shape/dtype sweeps in tests/test_kernels_*.py. They are
+also the implementation used by the CPU dry-run (TPU Pallas does not lower on
+the CPU backend), so the roofline terms in EXPERIMENTS.md §Roofline reflect
+this HLO unless noted.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---- attention (training / prefill) ----
+
+def attention_dense(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None) -> jnp.ndarray:
+    """Simple-but-exact GQA attention oracle (materializes S x S logits).
+
+    Used as the semantics contract in tests; the data-plane default is the
+    q-chunked ``attention`` below (identical math, bounded memory).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window is not None:
+        mask &= idx[:, None] - idx[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(B, S, H, D)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None,
+              q_chunk: int = 512, max_chunks: int = 16) -> jnp.ndarray:
+    """GQA attention, q-CHUNKED (exact — softmax is per q-row so chunking the
+    q axis changes nothing numerically). q: (B,S,H,D); k,v: (B,S,KV,D).
+
+    §Perf H6/H7 (measured on the dry-run HLO):
+    - k/v are REPEATED to the full H heads before the contraction so the
+      logits tensor carries a clean H axis -> shards over the model mesh axis
+      (the (KV, G) factorization defeated GSPMD for every arch with
+      KV < mesh_model, replicating the S x S logits 16x).
+    - q chunks skip fully-masked kv spans: causal drops the upper triangle
+      (~2x), sliding-window drops everything beyond the band (S/window x).
+    - peak logits memory drops S/q_chunk-fold vs the dense oracle.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc //= 2
+    qc = max(qc, S // max_chunks if S % max_chunks == 0 else qc)
+    nc = S // qc
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    outs = []
+    for i in range(nc):
+        q_lo = i * qc
+        # kv span for this chunk: causal upper bound, window lower bound
+        k_hi = (i + 1) * qc if causal else S
+        k_lo = max(0, q_lo - (window - 1)) if window is not None else 0
+        # align to qc for static, cache-friendly slices
+        k_lo = (k_lo // qc) * qc
+        ks = k[:, k_lo:k_hi]
+        vs = v[:, k_lo:k_hi]
+        qi = q[:, q_lo:q_lo + qc]
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, ks).astype(jnp.float32) * scale
+        qpos = q_lo + jnp.arange(qc)
+        kpos = k_lo + jnp.arange(k_hi - k_lo)
+        mask = jnp.ones((qc, k_hi - k_lo), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        outs.append(jnp.einsum("bhqk,bkhd->bqhd", p, vs))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---- decode attention (one new token vs a KV cache) ----
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,H,D); caches: (B,T,KV,D); length: (B,) valid cache prefix.
+    Returns (B,H,D)."""
+    B, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(T)[None, :] < length[:, None]  # (B,T)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache)
+    return out.reshape(B, H, D)
+
+
+# ---- MoE grouped matmul ----
+
+def moe_gmm(xg: jnp.ndarray, wg: jnp.ndarray) -> jnp.ndarray:
+    """Grouped expert matmul. xg: (E,C,din); wg: (E,din,dout) -> (E,C,dout)."""
+    return jnp.einsum("ecd,edf->ecf", xg, wg)
+
+
+# ---- gated linear recurrence (SSM / mLSTM shared primitive) ----
+
+def linear_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                decay: jnp.ndarray,
+                init_state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Gated linear attention scan (shared by Mamba2-SSD and xLSTM-mLSTM).
+
+        S_t = decay_t * S_{t-1} + k_t ⊗ v_t        (per head; S: (Dk, Dv))
+        n_t = decay_t * n_{t-1} + k_t
+        y_t = (q_t · S_t) / max(|q_t · n_t|, 1)
+
+    q,k: (B,S,H,Dk); v: (B,S,H,Dv); decay: (B,S,H) in (0,1].
+    Returns y: (B,S,H,Dv) and final (S, n) state for decode continuation.
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    if init_state is None:
+        S0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+        n0 = jnp.zeros((B, H, Dk), jnp.float32)
+    else:
+        S0, n0 = init_state
+
+    def step(carry, xs):
+        St, nt = carry
+        qt, kt, vt, dt = xs  # (B,H,Dk),(B,H,Dk),(B,H,Dv),(B,H)
+        St = dt[..., None, None] * St + kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        nt = dt[..., None] * nt + kt.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), St)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt.astype(jnp.float32), nt)), 1.0)
+        y = num / den[..., None]
+        return (St, nt), y
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(decay, 1, 0))
+    (Sf, nf), ys = jax.lax.scan(step, (S0, n0), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), (Sf, nf)
+
+
+def linear_scan_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        decay: jnp.ndarray, chunk: int = 128,
+                        ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Chunked pure-jnp form of ``linear_scan`` — same math as the Pallas
+    kernel: O(S/Lc) state round-trips instead of O(S), intra-chunk work as
+    dense matmuls. This is the DEFAULT data-plane path (§Perf H1: the
+    per-timestep scan was 10-30x memory-bound on hymba/xlstm); the sequential
+    ``linear_scan`` remains the test oracle."""
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    Lc = min(chunk, S)
+    while S % Lc:
+        Lc //= 2
+    nC = S // Lc
+
+    def resh(x):
+        return x.reshape(B, nC, Lc, *x.shape[2:]).astype(jnp.float32)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)                   # (B,nC,Lc,H,·)
+    ac = resh(decay)                                         # (B,nC,Lc,H)
+    la = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-37)), axis=2)
+    A = jnp.exp(la)                                          # (B,nC,Lc,H)
+    ratio = jnp.exp(la[:, :, :, None, :] - la[:, :, None, :, :])  # (B,nC,t,i,H)
+    mask = (jnp.arange(Lc)[:, None] >= jnp.arange(Lc)[None, :])[None, None, :, :, None]
+    W = jnp.where(mask, ratio, 0.0)
+    qk = jnp.einsum("bcthd,bcihd->bctih", qc, kc)            # (B,nC,t,i,H)
+    Wqk = W * qk
+    y_intra = jnp.einsum("bctih,bcihv->bcthv", Wqk, vc)
+    den_intra = Wqk.sum(axis=3)                              # (B,nC,t,H)
+    # decayed keys for the carry: (A_L / A_i) k_i
+    wL = jnp.exp(la[:, :, -1:, :] - la)                      # (B,nC,Lc,H)
+    kd = kc * wL[..., None]
+    S_chunk = jnp.einsum("bcihk,bcihv->bchkv", kd, vc)       # (B,nC,H,Dk,Dv)
+    n_chunk = kd.sum(axis=2)                                 # (B,nC,H,Dk)
+    AL = A[:, :, -1, :]                                      # (B,nC,H)
+
+    def carry_step(carry, xs):
+        S_in, n_in = carry                                   # (B,H,Dk,Dv), (B,H,Dk)
+        S_c, n_c, AL_c = xs
+        S_out = AL_c[..., None, None] * S_in + S_c
+        n_out = AL_c[..., None] * n_in + n_c
+        return (S_out, n_out), (S_in, n_in)
+
+    S0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    n0 = jnp.zeros((B, H, Dk), jnp.float32)
+    xs = (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(n_chunk, 1, 0),
+          jnp.moveaxis(AL, 1, 0))
+    (S_f, n_f), (S_ins, n_ins) = jax.lax.scan(carry_step, (S0, n0), xs)
+    S_ins = jnp.moveaxis(S_ins, 0, 1)                        # (B,nC,H,Dk,Dv)
+    n_ins = jnp.moveaxis(n_ins, 0, 1)                        # (B,nC,H,Dk)
+
+    y_cross = A[..., None] * jnp.einsum("bcthk,bchkv->bcthv", qc, S_ins)
+    den_cross = A * jnp.einsum("bcthk,bchk->bcth", qc, n_ins)
+    y = y_intra + y_cross
+    den = jnp.maximum(jnp.abs(den_intra + den_cross), 1.0)
+    y = (y / den[..., None]).reshape(B, S, H, Dv).astype(v.dtype)
+    return y, (S_f, n_f)
+
+
+def linear_scan_step(q, k, v, decay, state):
+    """Single decode step of linear_scan. q,k: (B,H,Dk); v: (B,H,Dv); decay: (B,H)."""
+    St, nt = state
+    St = decay[..., None, None] * St + k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    nt = decay[..., None] * nt + k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), St)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), nt)), 1.0)
+    return (num / den[..., None]).astype(v.dtype), (St, nt)
+
+
+# ---- fused RMSNorm ----
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single-pod: (16, 16) = ("data", "model") — one v5e pod of
+256 chips. Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips;
+the "pod" axis only ever carries batch (pure DP across pods: the slowest
+links are crossed by exactly one gradient all-reduce per step).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config.base import MeshConfig
+
+SINGLE_POD = MeshConfig(shape=(16, 16), axes=("data", "model"))
+MULTI_POD = MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(config: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(config.shape, config.axes)
+
+
+def make_host_mesh(model_axis: Optional[int] = None) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model = model_axis or 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

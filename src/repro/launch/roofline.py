@@ -1,0 +1,119 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in SECONDS:
+
+    compute_s    = HLO_FLOPs / (chips × 197e12)          [bf16 MXU peak]
+    memory_s     = HLO_bytes / (chips × 819e9)           [HBM bandwidth]
+    collective_s = collective_bytes / (chips × 50e9)     [ICI per link]
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (whole-program
+totals; per-chip = total / chips since GSPMD splits evenly).
+collective_bytes is NOT in cost_analysis: we parse the post-SPMD HLO text
+and sum SHARD-LOCAL operand bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, weighted by the ring
+traffic factor each collective actually puts on a link.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) sanity-checks the compiled
+FLOPs (remat & dead compute inflate the ratio HLO/MODEL above ~1.33 for a
+remat'd train step: fwd+bwd+recompute ≈ 8·N·D).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*\(?([\w\[\],\s{}]+?)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.MULTILINE)
+
+# Ring-algorithm traffic each op puts on a single link, as a multiple of the
+# shard-local payload bytes (n = group size; approximated for large n):
+#   all-gather: receives (n-1)/n of the FULL output  ~= output_bytes
+#   all-reduce: 2(n-1)/n of payload                  ~= 2x
+#   reduce-scatter: (n-1)/n of payload               ~= 1x
+#   all-to-all: (n-1)/n of payload                   ~= 1x
+#   collective-permute: 1x
+_TRAFFIC_FACTOR = {
+    "all-gather": 1.0,      # applied to the (full) result shape
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum link-traffic bytes per collective kind from post-SPMD HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _TRAFFIC_FACTOR}
+    count: Dict[str, int] = {k: 0 for k in _TRAFFIC_FACTOR}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        result_shapes, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_shapes)
+        out[kind] += b * _TRAFFIC_FACTOR[kind]
+        count[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k in _TRAFFIC_FACTOR)
+    out["counts"] = count  # type: ignore
+    return out
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    """rec: a dry-run record. flops_total / bytes_total / collective_bytes are
+    PER-DEVICE quantities: cost_analysis and the HLO text both describe the
+    post-SPMD per-partition program (verified: per-device flops × chips ≈
+    8·N·D for a remat'd train step). The brief's chips-denominator formulas
+    are therefore applied with cluster_total = per_device × chips, i.e. the
+    chips cancel: term_s = per_device_quantity / per_chip_rate."""
+    chips = rec["num_devices"]
+    compute_s = rec["flops_total"] / PEAK_FLOPS
+    memory_s = rec["bytes_total"] / HBM_BW
+    coll_bytes = rec["collective_bytes"]["total"]
+    collective_s = coll_bytes / ICI_BW
+
+    n = rec["active_params"]
+    d = rec["tokens"]
+    factor = 6.0 if rec["mode"] == "train" else 2.0
+    model_flops = factor * n * d              # cluster-total useful FLOPs
+    model_flops_pd = model_flops / chips      # per-device share
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "model_flops": model_flops,
+        "hlo_flops_per_device": rec["flops_total"],
+        "useful_flops_ratio": (model_flops_pd / rec["flops_total"]
+                               if rec["flops_total"] else 0.0),
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["dominant"] = dom.replace("_s", "")
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    ideal_s = model_flops_pd / PEAK_FLOPS
+    terms["roofline_fraction"] = ideal_s / bound if bound > 0 else 0.0
+    return terms

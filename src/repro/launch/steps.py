@@ -1,0 +1,187 @@
+"""Sharded step builders + input specs for every (arch × shape) cell.
+
+``make_train_step``: microbatched (grad-accumulation scan), remat'd,
+grad-clipped train step with the configured optimizer.
+``make_serve_step``: one-token decode against a KV/recurrent cache.
+``make_prefill_step``: full-sequence forward (serving prefill).
+
+``input_specs`` returns ShapeDtypeStructs for every model input of a cell —
+weak-type-correct, shardable, no device allocation — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ArchFamily, ModelConfig, OptimizerConfig, ShapeConfig, TrainConfig
+from repro.models.transformer import (
+    init_decode_state,
+    lm_apply,
+    lm_decode_step,
+    lm_init,
+    lm_loss,
+)
+from repro.optim import clip_by_global_norm, make_optimizer
+
+PyTree = Any
+
+
+# ---------------- input specs (ShapeDtypeStruct stand-ins) ----------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell. train/prefill: the batch dict;
+    decode: {"state": ..., "tokens": ..., "length": ...}."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.family == ArchFamily.AUDIO:
+            batch["frontend"] = sd((B, S, cfg.d_model), f32)
+            if shape.mode == "train":
+                batch["labels"] = sd((B, S), i32)
+        elif cfg.family == ArchFamily.VLM:
+            F = cfg.frontend_tokens
+            batch["frontend"] = sd((B, F, cfg.d_model), f32)
+            batch["tokens"] = sd((B, S - F), i32)
+            if shape.mode == "train":
+                batch["labels"] = sd((B, S - F), i32)
+        else:
+            batch["tokens"] = sd((B, S), i32)
+            if shape.mode == "train":
+                batch["labels"] = sd((B, S), i32)
+        return batch
+
+    # decode: one new token against a cache of S
+    state = jax.eval_shape(lambda: init_decode_state(cfg, B, S))
+    if cfg.family == ArchFamily.AUDIO:
+        tokens = sd((B, cfg.d_model), f32)
+    else:
+        tokens = sd((B,), i32)
+    return {"state": state, "tokens": tokens, "length": sd((B,), i32)}
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical axes matching input_specs (for in_shardings)."""
+    if shape.mode in ("train", "prefill"):
+        axes: Dict[str, Any] = {}
+        if cfg.family == ArchFamily.AUDIO:
+            axes["frontend"] = ("batch", "seq", None)
+            if shape.mode == "train":
+                axes["labels"] = ("batch", "seq")
+        elif cfg.family == ArchFamily.VLM:
+            axes["frontend"] = ("batch", "seq", None)
+            axes["tokens"] = ("batch", "seq")
+            if shape.mode == "train":
+                axes["labels"] = ("batch", "seq")
+        else:
+            axes["tokens"] = ("batch", "seq")
+            if shape.mode == "train":
+                axes["labels"] = ("batch", "seq")
+        return axes
+    from repro.models.transformer import decode_state_axes
+    if cfg.family == ArchFamily.AUDIO:
+        tok_ax = ("cache_batch", None)
+    else:
+        tok_ax = ("cache_batch",)
+    return {"state": decode_state_axes(cfg), "tokens": tok_ax,
+            "length": ("cache_batch",)}
+
+
+# ---------------- optimizer state axes ----------------
+
+def opt_state_axes(cfg: ModelConfig, params_axes: PyTree, opt: OptimizerConfig):
+    """Logical axes for the optimizer state pytree (mirrors params)."""
+    is_ax = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    if opt.name in ("adam", "adamw"):
+        inner = (jax.tree_util.tree_map(lambda a: a, params_axes, is_leaf=is_ax),
+                 jax.tree_util.tree_map(lambda a: a, params_axes, is_leaf=is_ax))
+    elif opt.name == "momentum":
+        inner = jax.tree_util.tree_map(lambda a: a, params_axes, is_leaf=is_ax)
+    elif opt.name == "adafactor":
+        def factored(a):
+            # row acc drops last dim; col acc drops second-to-last
+            if len(a) >= 2:
+                return (a[:-1], a[:-2] + a[-1:])
+            return (a, None)
+        inner = jax.tree_util.tree_map(factored, params_axes, is_leaf=is_ax)
+    else:  # sgd
+        inner = ()
+    return {"step": (), "inner": inner}
+
+
+# ---------------- train step ----------------
+
+def make_train_step(cfg: ModelConfig, train_cfg: TrainConfig):
+    opt_init, opt_update = make_optimizer(train_cfg.optimizer)
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb)
+
+    def train_step(params, opt_state, batch):
+        M = train_cfg.microbatches
+        if M > 1:
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), grad_acc, g)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_body, (0.0, zeros), mbs)
+            loss = loss_sum / M
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.optimizer.grad_clip)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt_init
+
+
+# ---------------- serving steps ----------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm_apply(cfg, params, tokens=batch.get("tokens"),
+                        frontend=batch.get("frontend"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, state, tokens, length):
+        return lm_decode_step(cfg, params, state, tokens, length)
+    return serve_step
+
+
+# ---------------- host-side batch synthesis (real runs, not dry-run) ----------------
+
+def synth_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def materialize(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, max(cfg.vocab_size, 2),
+                                            s.shape), s.dtype)
+        return jnp.asarray(rng.normal(0, 1, s.shape), s.dtype)
+
+    return jax.tree_util.tree_map(materialize, specs)

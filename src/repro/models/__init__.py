@@ -1,0 +1,13 @@
+"""Model zoo: composable LM backbone (dense/MoE/SSM/hybrid/VLM/audio) +
+the paper's CNN classifiers, all pure JAX.
+
+Submodules import lazily so the FL plane (cnn_zoo) never pays LM import cost.
+"""
+
+from repro.models.cnn_zoo import cnn_apply, cnn_init, cnn_loss_and_accuracy
+
+__all__ = [
+    "cnn_apply",
+    "cnn_init",
+    "cnn_loss_and_accuracy",
+]

@@ -1,0 +1,123 @@
+"""The paper's CNN model zoo in pure JAX (NHWC, lax conv).
+
+Built from the ``cnn_spec`` mini-language in configs/paper_models.py.
+Params are a flat list of per-layer dicts so they vmap/aggregate trivially
+(FedAvg = weighted tree-mean over a stacked leading axis).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+
+def _conv_init(rng, k, c_in, c_out):
+    fan_in = k * k * c_in
+    w = rng.normal(0, np.sqrt(2.0 / fan_in), (k, k, c_in, c_out))
+    return {"w": jnp.asarray(w, jnp.float32), "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def _fc_init(rng, c_in, c_out):
+    w = rng.normal(0, np.sqrt(2.0 / c_in), (c_in, c_out))
+    return {"w": jnp.asarray(w, jnp.float32), "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def cnn_init(cfg: ModelConfig, seed: int = 0) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    params: List[Dict] = []
+    c = cfg.input_shape[-1]
+    spatial = cfg.input_shape[0]
+    for layer in cfg.cnn_spec:
+        kind = layer[0]
+        if kind in ("conv", "convp"):
+            _, out_c, k = layer
+            params.append(_conv_init(rng, k, c, out_c))
+            c = out_c
+            if kind == "convp":
+                spatial //= 2
+        elif kind == "gn":
+            params.append({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))})
+        elif kind == "res":
+            _, out_c, stride = layer
+            blk = {
+                "conv1": _conv_init(rng, 3, c, out_c),
+                "conv2": _conv_init(rng, 3, out_c, out_c),
+            }
+            if stride != 1 or c != out_c:
+                blk["proj"] = _conv_init(rng, 1, c, out_c)
+            params.append(blk)
+            c = out_c
+            spatial //= stride
+        elif kind == "flatten":
+            params.append({})
+            c = c * spatial * spatial
+        elif kind == "fc":
+            _, width = layer
+            params.append(_fc_init(rng, c, width))
+            c = width
+        else:
+            raise ValueError(kind)
+    params.append(_fc_init(rng, c, cfg.num_classes))  # classifier head
+    return params
+
+
+def _conv(x, p, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _groupnorm(x, p, groups=8):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(n, h, w, c) * p["scale"] + p["bias"]
+
+
+def cnn_apply(params: List[Dict], cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, H, W, C) -> logits (N, num_classes)."""
+    i = 0
+    for layer in cfg.cnn_spec:
+        kind = layer[0]
+        p = params[i]
+        if kind == "conv":
+            x = jax.nn.relu(_conv(x, p))
+        elif kind == "convp":
+            x = _maxpool2(jax.nn.relu(_conv(x, p)))
+        elif kind == "gn":
+            x = _groupnorm(x, p)
+        elif kind == "res":
+            _, out_c, stride = layer
+            h = jax.nn.relu(_conv(x, p["conv1"], stride))
+            h = _conv(h, p["conv2"])
+            sc = _conv(x, p["proj"], stride) if "proj" in p else x
+            x = jax.nn.relu(h + sc)
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "fc":
+            x = jax.nn.relu(x @ p["w"] + p["b"])
+        i += 1
+    head = params[-1]
+    return x @ head["w"] + head["b"]
+
+
+def cnn_loss_and_accuracy(params, cfg: ModelConfig, x, y) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    logits = cnn_apply(params, cfg, x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == y).mean()
+    return loss, acc

@@ -1,0 +1,192 @@
+"""Shared transformer layers: RMSNorm, RoPE, MLP variants, embeddings.
+
+Params are plain dicts; every tensor has a parallel "logical axes" tuple used
+by launch/sharding.py. Initializers take a numpy Generator so model building
+is deterministic and host-side (no device traffic at init).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+_abstract = threading.local()
+
+
+@contextlib.contextmanager
+def abstract_init():
+    """Inside this context every initializer returns ShapeDtypeStructs —
+    zero host allocation. The dry-run builds trillion-parameter models with
+    it; the logical-axes trees are identical either way."""
+    _abstract.on = True
+    try:
+        yield
+    finally:
+        _abstract.on = False
+
+
+def is_abstract() -> bool:
+    return getattr(_abstract, "on", False)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def normal(rng: np.random.Generator, shape, scale, dtype):
+    if is_abstract():
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.asarray(rng.normal(0.0, scale, shape), dtype=dtype)
+
+
+def ones(shape, dtype):
+    if is_abstract():
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jnp.ones(shape, dtype)
+
+
+def zeros(shape, dtype):
+    if is_abstract():
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def use_param(w, dtype, *logical_axes):
+    """Cast a (possibly f32-stored) weight to the compute dtype and RE-PIN its
+    sharding. Without the constraint after the cast, the SPMD partitioner is
+    free to all-gather the f32 original and cast afterwards — which it did
+    (§Perf H2): pinning forces FSDP/TP weight collectives to move bf16.
+    """
+    from repro.launch.sharding import shard
+
+    y = w.astype(dtype)
+    if logical_axes:
+        y = shard(y, *logical_axes)
+    return y
+
+
+# ---- RMSNorm ----
+
+def rmsnorm_init(cfg: ModelConfig, dim: int):
+    return {"scale": ones((dim,), _pdtype(cfg))}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---- RoPE ----
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotated by positions (..., S).
+
+    Angles are computed in f32 (position precision matters at 500k ctx) but
+    cos/sin are CAST TO x.dtype before the rotation: keeping the multiply in
+    f32 promoted the whole k tensor to f32 ahead of its GQA all-gather —
+    doubling that collective (§Perf H3, measured in the deepseek-67b HLO).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---- MLP (SwiGLU / GeGLU / GELU) ----
+
+def mlp_init(cfg: ModelConfig, rng: np.random.Generator):
+    d, f = cfg.d_model, cfg.d_ff
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f)
+    pd = _pdtype(cfg)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p = {
+            "w_gate": normal(rng, (d, f), s_in, pd),
+            "w_up": normal(rng, (d, f), s_in, pd),
+            "w_down": normal(rng, (f, d), s_out, pd),
+        }
+        a = {
+            "w_gate": ("embed", "mlp"),
+            "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed"),
+        }
+    else:  # plain gelu
+        p = {
+            "w_up": normal(rng, (d, f), s_in, pd),
+            "w_down": normal(rng, (f, d), s_out, pd),
+        }
+        a = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return p, a
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    from repro.launch.sharding import shard
+
+    dt = x.dtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(x @ use_param(p["w_gate"], dt, "embed", "mlp")) * (
+            x @ use_param(p["w_up"], dt, "embed", "mlp"))
+    else:
+        h = jax.nn.gelu(x @ use_param(p["w_up"], dt, "embed", "mlp"))
+    h = shard(h, "batch", None, "act_mlp")
+    return h @ use_param(p["w_down"], dt, "mlp", "embed")
+
+
+# ---- Embeddings ----
+
+def embed_init(cfg: ModelConfig, rng: np.random.Generator):
+    # N(0, 1/sqrt(d)): with the sqrt(d) input multiplier this gives unit-scale
+    # activations, and tied-unembedding logits stay O(|x|).
+    p = {"embedding": normal(rng, (cfg.vocab_size, cfg.d_model),
+                             1.0 / np.sqrt(cfg.d_model), _pdtype(cfg))}
+    a = {"embedding": ("vocab", "embed")}
+    return p, a
+
+
+def embed_apply(cfg: ModelConfig, p, tokens):
+    return p["embedding"].astype(_dtype(cfg))[tokens]
+
+
+def unembed_apply(cfg: ModelConfig, emb_p, head_p, x):
+    from repro.launch.sharding import shard
+
+    if cfg.tie_embeddings:
+        w = emb_p["embedding"].astype(x.dtype).T
+    else:
+        w = head_p["w"].astype(x.dtype)
+    # Pin (batch, seq, vocab-shard): left free, the partitioner replicated
+    # the ~20 GB logits across the data axis to simplify the loss reduction
+    # (§Perf H4c — two f32 all-gathers + one all-reduce of the full logits).
+    return shard(x @ w, "batch", None, "act_vocab")
+
+
+def head_init(cfg: ModelConfig, rng: np.random.Generator):
+    if cfg.tie_embeddings:
+        return {}, {}
+    p = {"w": normal(rng, (cfg.d_model, cfg.vocab_size), 1.0 / np.sqrt(cfg.d_model), _pdtype(cfg))}
+    # vocab-only sharding (§Perf H4): sharding the d_model (contraction) dim
+    # over "data" made every logits matmul emit PARTIAL sums -> an all-reduce
+    # of the full (B,S,vocab/16) f32 logits (9.7 GB/microbatch on qwen3-8b).
+    # Vocab-sharded weights keep logits local; the weight is replicated over
+    # "data" (~150 MB/device for the largest vocab) — a >20x collective win.
+    a = {"w": (None, "vocab")}
+    return p, a

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts block: top-k router + LOCAL expert dispatch (shard_map).
+
+Communication-minimal EP layout (the naive global sort/scatter version
+produced 2x f32[T*k, d] all-reduces per layer — 51 GB/device/block on dbrx —
+because GSPMD cannot shard a global argsort/scatter-add; caught in the
+dry-run and redesigned):
+
+- Experts are sharded over the "model" mesh axis and REPLICATED over "data"
+  (no FSDP on expert weights: ZeRO-gathering them per layer would dwarf the
+  activation traffic).
+- Tokens stay batch-sharded over ("pod","data"). Under shard_map, every
+  (data i, model j) device routes ITS tokens, buckets only the experts OWNED
+  by model-shard j (capacity C_loc = ceil(T_local*k/E * cf), overflow drops),
+  runs the local grouped matmul (kernels/ops.moe_gmm -> Pallas on TPU), and
+  combines into a PARTIAL (T_local, d) output.
+- One psum over "model" completes the combine — identical collective volume
+  to a dense TP MLP's output all-reduce.
+
+Without an active mesh (unit tests) the same local function runs with all
+experts local — bitwise-identical math.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.kernels import ops
+from repro.launch.sharding import _active_mesh, current_rules
+from repro.models.layers import normal, _pdtype
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(cfg: ModelConfig, rng: np.random.Generator):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    pd = _pdtype(cfg)
+    p = {
+        "router": normal(rng, (d, E), s_in, pd),
+        "w_gate": normal(rng, (E, d, f), s_in, pd),
+        "w_up": normal(rng, (E, d, f), s_in, pd),
+        "w_down": normal(rng, (E, f, d), s_out, pd),
+    }
+    a = {
+        "router": (None, None),              # small; replicated
+        # STORAGE: experts over "model" (EP) AND the contraction dim over
+        # "data" (ZeRO-3) — EP-only storage replicated each expert across the
+        # 16 data shards (kimi-k2: 129.7 GB/device, 8x over HBM; caught by
+        # memory_analysis). The shard_map all-gathers the local experts'
+        # weights per layer (compute stays EP-local).
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", "mlp_zero", None),
+    }
+    return p, a
+
+
+def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,d) -> (B,S,d)."""
+    mesh = _active_mesh()
+    E = cfg.num_experts
+    rules = current_rules()
+    model_axes = tuple(a for a in rules.get("experts", ())
+                       if mesh is not None and a in mesh.axis_names)
+    n_model = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                           for a in model_axes])) if (mesh and model_axes) else 1
+
+    if mesh is None or n_model == 1 or E % n_model != 0:
+        return _moe_local(cfg, p, x, 0, E).astype(x.dtype)
+
+    batch_axes = tuple(a for a in rules.get("batch", ()) if a in mesh.axis_names)
+    E_local = E // n_model
+    maxis = model_axes[0]
+    bspec = (tuple(batch_axes) if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+    # ZeRO storage axis for the expert weights' contraction dims (d for
+    # gate/up, f for down): present and divisible -> gather inside.
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    zaxis = "data" if ("data" in mesh.axis_names
+                       and cfg.d_model % axis_sizes["data"] == 0
+                       and cfg.d_ff % axis_sizes["data"] == 0) else None
+
+    def shard_fn(router, wg, wu, wd, xl):
+        # model-axis rank of this shard -> which experts it owns.
+        j = jax.lax.axis_index(maxis)
+        if zaxis is not None:
+            # ZeRO-3: weights stored contraction-dim-sharded over data;
+            # gather the LOCAL experts' full weights for this layer's gmm.
+            wg = jax.lax.all_gather(wg, zaxis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, zaxis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, zaxis, axis=1, tiled=True)
+        p_local = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        partial = _moe_local(cfg, p_local, xl, j * E_local, E_local)
+        return jax.lax.psum(partial, maxis)
+
+    zspec = zaxis  # None -> replicated storage (small-expert fallback)
+    y = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(None, None), P(maxis, zspec, None), P(maxis, zspec, None),
+                  P(maxis, zspec, None), P(bspec, None, None)),
+        out_specs=P(bspec, None, None), check_vma=False)(
+        p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+    return y.astype(x.dtype)
+
+
+def _moe_local(cfg, p, x, e_start, E_local: int):
+    """Route + bucket + grouped-matmul for the E_local experts owned locally.
+
+    x: (B_l, S, d) local tokens (full d); e_start may be a traced scalar
+    (lax.axis_index under shard_map) or a static int (no-mesh path).
+    Returns the PARTIAL output (B_l, S, d) of the local experts only.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = int(math.ceil(T * k / E * CAPACITY_FACTOR))
+    dt = x.dtype
+    xf = x.reshape(T, d)
+
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)
+    weights, ids = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = ids.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    flat_w = weights.reshape(-1)
+
+    hit = (flat_e >= e_start) & (flat_e < e_start + E_local)
+    e_rel = jnp.where(hit, flat_e - e_start, E_local)
+    order = jnp.argsort(e_rel, stable=True)
+    e_sorted = e_rel[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = jnp.where(hit[order], flat_w[order], 0.0)
+
+    counts = jnp.bincount(e_sorted, length=E_local + 1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[e_sorted]
+
+    xg = jnp.zeros((E_local, C, d), dt).at[e_sorted, pos].set(
+        xf[tok_sorted], mode="drop")
+
+    h = jax.nn.silu(ops.moe_gmm(xg, p["w_gate"].astype(dt))) * ops.moe_gmm(
+        xg, p["w_up"].astype(dt))
+    yg = ops.moe_gmm(h, p["w_down"].astype(dt))
+
+    ok = (e_sorted < E_local) & (pos < C)
+    w_eff = jnp.where(ok, w_sorted, 0.0)
+    yf = jnp.zeros((T, d), jnp.float32).at[tok_sorted].add(
+        (yg[jnp.minimum(e_sorted, E_local - 1), jnp.minimum(pos, C - 1)]
+         * w_eff[:, None].astype(dt)).astype(jnp.float32))
+    return yf.reshape(B, S, d)

@@ -1,0 +1,249 @@
+"""SSM / recurrent blocks: Mamba2-style SSD heads (Hymba hybrid) and
+xLSTM mLSTM / sLSTM blocks.
+
+All sequence mixing funnels through the shared gated-linear-recurrence
+primitive ``kernels/ops.linear_scan`` (S_t = a_t S_{t-1} + k_t v_t^T), which
+is exactly the TPU-friendly chunked-scan form (the Pallas kernel tiles it);
+decode is the O(1) ``linear_scan_step``. This is the documented hardware
+adaptation of Mamba's CUDA selective scan (DESIGN.md §3): scalar-per-head
+decay (Mamba2/SSD) instead of Mamba1's per-channel gating, because the
+outer-product state update maps onto the MXU.
+
+sLSTM (xLSTM) is inherently sequential scalar recurrence; it keeps a
+lax.scan over time (O(1) state, tiny math — never a bottleneck).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.kernels import ops
+from repro.launch.sharding import shard
+from repro.models.layers import normal, zeros, _pdtype
+
+
+# ---------- Mamba2-style SSD heads (used by Hymba's parallel SSM branch) ----------
+
+def ssd_init(cfg: ModelConfig, rng: np.random.Generator):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = max(cfg.num_heads, 1)
+    dk = cfg.ssm_state or 16
+    s = 1.0 / np.sqrt(d)
+    pd = _pdtype(cfg)
+    p = {
+        "w_in": normal(rng, (d, inner), s, pd),         # value path
+        "w_qk": normal(rng, (d, 2 * H * dk), s, pd),     # B,C projections (k,q)
+        "w_dt": normal(rng, (d, H), s, pd),              # per-head decay control
+        "a_log": zeros((H,), pd),                        # state decay base
+        "w_out": normal(rng, (inner, d), 1.0 / np.sqrt(inner), pd),
+    }
+    a = {
+        "w_in": ("embed", "inner"),
+        "w_qk": ("embed", "qkv"),
+        "w_dt": ("embed", None),
+        "a_log": (None,),
+        "w_out": ("inner", "embed"),
+    }
+    return p, a
+
+
+def ssd_apply(cfg: ModelConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H = max(cfg.num_heads, 1)
+    dk = cfg.ssm_state or 16
+    inner = cfg.ssm_expand * d
+    dv = inner // H
+    dt_ = x.dtype
+    v = (x @ p["w_in"].astype(dt_)).reshape(B, S, H, dv)
+    qk = (x @ p["w_qk"].astype(dt_)).reshape(B, S, H, 2 * dk)
+    k, q = qk[..., :dk], qk[..., dk:]
+    # decay in (0,1): exp(-softplus(dt) * exp(a_log))
+    dt_ctrl = jax.nn.softplus((x @ p["w_dt"].astype(dt_)).astype(jnp.float32))
+    decay = jnp.exp(-dt_ctrl * jnp.exp(p["a_log"].astype(jnp.float32))[None, None, :])
+    y, _ = ops.linear_scan(q, k, v, decay)
+    y = y.reshape(B, S, inner)
+    y = shard(y, "batch", None, "act_mlp")
+    return y @ p["w_out"].astype(dt_)
+
+
+def ssd_decode_state(cfg: ModelConfig, batch: int):
+    H = max(cfg.num_heads, 1)
+    dk = cfg.ssm_state or 16
+    dv = cfg.ssm_expand * cfg.d_model // H
+    return (jnp.zeros((batch, H, dk, dv), jnp.float32),
+            jnp.zeros((batch, H, dk), jnp.float32))
+
+
+def ssd_decode(cfg: ModelConfig, p, x, state):
+    """x: (B,1,d) -> (B,1,d), new state."""
+    B = x.shape[0]
+    H = max(cfg.num_heads, 1)
+    dk = cfg.ssm_state or 16
+    inner = cfg.ssm_expand * cfg.d_model
+    dv = inner // H
+    dt_ = x.dtype
+    xt = x[:, 0]
+    v = (xt @ p["w_in"].astype(dt_)).reshape(B, H, dv)
+    qk = (xt @ p["w_qk"].astype(dt_)).reshape(B, H, 2 * dk)
+    k, q = qk[..., :dk], qk[..., dk:]
+    dt_ctrl = jax.nn.softplus((xt @ p["w_dt"].astype(dt_)).astype(jnp.float32))
+    decay = jnp.exp(-dt_ctrl * jnp.exp(p["a_log"].astype(jnp.float32))[None, :])
+    y, state = ops.linear_scan_step(q, k, v, decay, state)
+    return (y.reshape(B, 1, inner) @ p["w_out"].astype(dt_)), state
+
+
+# ---------- xLSTM: mLSTM block ----------
+
+def mlstm_init(cfg: ModelConfig, rng: np.random.Generator):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = inner // H
+    s = 1.0 / np.sqrt(d)
+    pd = _pdtype(cfg)
+    p = {
+        "w_up": normal(rng, (d, 2 * inner), s, pd),      # u (value path), z (output gate)
+        "w_qk": normal(rng, (d, 2 * H * dh), s, pd),
+        "w_if": normal(rng, (d, 2 * H), s, pd),          # input & forget gates
+        "w_down": normal(rng, (inner, d), 1.0 / np.sqrt(inner), pd),
+    }
+    a = {
+        "w_up": ("embed", "inner"),
+        "w_qk": ("embed", "qkv"),
+        "w_if": ("embed", None),
+        "w_down": ("inner", "embed"),
+    }
+    return p, a
+
+
+def _mlstm_qkvg(cfg, p, x):
+    B = x.shape[0]
+    S = x.shape[1] if x.ndim == 3 else 1
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = inner // H
+    dt_ = x.dtype
+    x2 = x.reshape(B, S, d)
+    uz = x2 @ p["w_up"].astype(dt_)
+    u, z = uz[..., :inner], uz[..., inner:]
+    v = u.reshape(B, S, H, dh)
+    qk = (x2 @ p["w_qk"].astype(dt_)).reshape(B, S, H, 2 * dh)
+    q, k = qk[..., :dh], qk[..., dh:]
+    k = k / jnp.sqrt(jnp.asarray(dh, dt_))
+    gates = (x2 @ p["w_if"].astype(dt_)).astype(jnp.float32)
+    i_gate = jnp.exp(jnp.minimum(gates[..., :H], 8.0))   # exponential input gate
+    f_gate = jax.nn.sigmoid(gates[..., H:] + 1.0)        # forget/decay
+    return q, k, v, z, i_gate, f_gate
+
+
+def mlstm_apply(cfg: ModelConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    q, k, v, z, i_gate, f_gate = _mlstm_qkvg(cfg, p, x)
+    y, _ = ops.linear_scan(q, k * i_gate[..., None].astype(k.dtype), v, f_gate)
+    y = y.reshape(B, S, inner) * jax.nn.silu(z)
+    y = shard(y, "batch", None, "act_mlp")
+    return y @ p["w_down"].astype(x.dtype)
+
+
+def mlstm_decode_state(cfg: ModelConfig, batch: int):
+    inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = inner // H
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32))
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    inner = cfg.ssm_expand * cfg.d_model
+    q, k, v, z, i_gate, f_gate = _mlstm_qkvg(cfg, p, x)
+    y, state = ops.linear_scan_step(
+        q[:, 0], (k * i_gate[..., None].astype(k.dtype))[:, 0], v[:, 0], f_gate[:, 0], state)
+    y = y.reshape(B, 1, inner) * jax.nn.silu(z)
+    return y @ p["w_down"].astype(x.dtype), state
+
+
+# ---------- xLSTM: sLSTM block (scalar recurrence, sequential) ----------
+
+def slstm_init(cfg: ModelConfig, rng: np.random.Generator):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = inner // H
+    s = 1.0 / np.sqrt(d)
+    pd = _pdtype(cfg)
+    p = {
+        "w_x": normal(rng, (d, 4 * inner), s, pd),       # z, i, f, o pre-activations
+        # BLOCK-DIAGONAL recurrence (xLSTM paper): each head recurs only on
+        # itself -> (H, dh, 4*dh) instead of a dense (inner, 4*inner).
+        "r_h": normal(rng, (H, dh, 4 * dh), 1.0 / np.sqrt(dh), pd),
+        "w_down": normal(rng, (inner, d), 1.0 / np.sqrt(inner), pd),
+    }
+    a = {"w_x": ("embed", "inner"), "r_h": ("heads", None, None),
+         "w_down": ("inner", "embed")}
+    return p, a
+
+
+def _slstm_cell(p, carry, xt, inner):
+    """One sLSTM step with exponential gating + normalizer state.
+    xt: (B, 4*inner) input pre-activations; h: (B, inner)."""
+    h, c, n = carry
+    H, dh = p["r_h"].shape[0], p["r_h"].shape[1]
+    B = h.shape[0]
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hh.astype(jnp.float32),
+                     p["r_h"].astype(jnp.float32))       # (B,H,4*dh)
+    z, i, f, o = jnp.split(rec, 4, axis=-1)
+    xz, xi, xf, xo = [t.reshape(B, H, dh) for t in
+                      jnp.split(xt.astype(jnp.float32), 4, axis=-1)]
+    i = jnp.exp(jnp.minimum(xi + i, 8.0))
+    f = jax.nn.sigmoid(xf + f + 1.0)
+    c = f * c.reshape(B, H, dh) + i * jnp.tanh(xz + z)
+    n = f * n.reshape(B, H, dh) + i
+    h_new = jax.nn.sigmoid(xo + o) * (c / jnp.maximum(n, 1.0))
+    return (h_new.reshape(B, inner).astype(xt.dtype),
+            c.reshape(B, inner), n.reshape(B, inner))
+
+
+def slstm_apply(cfg: ModelConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    dt_ = x.dtype
+    xs = (x @ p["w_x"].astype(dt_))                      # (B,S,4*inner)
+    h0 = jnp.zeros((B, inner), dt_)
+    c0 = jnp.zeros((B, inner), jnp.float32)
+    n0 = jnp.zeros((B, inner), jnp.float32)
+
+    def step(carry, xt):
+        carry = _slstm_cell(p, carry, xt, inner)
+        return carry, carry[0]
+
+    _, hs = jax.lax.scan(step, (h0, c0, n0), jnp.moveaxis(xs, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                            # (B,S,inner)
+    y = shard(y, "batch", None, "act_mlp")
+    return y @ p["w_down"].astype(dt_)
+
+
+def slstm_decode_state(cfg: ModelConfig, batch: int, dtype):
+    inner = cfg.ssm_expand * cfg.d_model
+    return (jnp.zeros((batch, inner), dtype),
+            jnp.zeros((batch, inner), jnp.float32),
+            jnp.zeros((batch, inner), jnp.float32))
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    inner = cfg.ssm_expand * cfg.d_model
+    xt = (x[:, 0] @ p["w_x"].astype(x.dtype))
+    state = _slstm_cell(p, state, xt, inner)
+    y = state[0][:, None, :]
+    return y @ p["w_down"].astype(x.dtype), state

@@ -1,0 +1,6 @@
+"""Monitoring: structured metrics + scheduler decision audit logs."""
+
+from repro.monitoring.metrics import MetricsLogger, StepTimer
+from repro.monitoring.audit import SchedulerAudit
+
+__all__ = ["MetricsLogger", "StepTimer", "SchedulerAudit"]

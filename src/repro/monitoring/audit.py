@@ -1,0 +1,53 @@
+"""Scheduler decision audit log.
+
+Every scheduling decision is reconstructable: which devices were available,
+what the scheduler chose, the estimated vs realized cost, and the fairness
+state. Required for debugging production scheduling regressions ("why did
+job 3 starve yesterday?") and doubles as the data source for offline
+scheduler evaluation / RLDS re-training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.multijob import RoundRecord
+
+
+class SchedulerAudit:
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a", buffering=1)
+
+    def on_round(self, rec: RoundRecord) -> None:
+        self._f.write(json.dumps({
+            "job": rec.job,
+            "round": rec.round_idx,
+            "t_start": rec.t_start,
+            "t_end": rec.t_end,
+            "round_time": rec.round_time,
+            "cost": rec.cost,
+            "fairness": rec.fairness,
+            "loss": rec.loss,
+            "accuracy": rec.accuracy,
+            "devices": np.asarray(rec.device_ids).tolist(),
+            "dropped": np.asarray(rec.dropped).tolist(),
+        }) + "\n")
+
+    def close(self) -> None:
+        self._f.close()
+
+
+def replay(path: str):
+    """Load an audit log back into RoundRecord-like dicts."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                out.append(json.loads(line))
+    return out

@@ -1,0 +1,56 @@
+"""Structured metrics logging (JSONL) + step timing.
+
+Production loops emit one JSONL record per step (append-only, crash-safe:
+each line is flushed); dashboards/tools tail the file. ``StepTimer`` keeps an
+EMA of step time and flags stragglers (steps > k x EMA) — the host-side
+counterpart of the engine's device-level straggler mitigation.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: str, flush_every: int = 1):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a", buffering=1)
+        self._flush_every = flush_every
+        self._n = 0
+
+    def log(self, step: int, metrics: Dict[str, Any], **extra) -> None:
+        rec = {"step": step, "t": time.time(), **metrics, **extra}
+        self._f.write(json.dumps(rec, default=float) + "\n")
+        self._n += 1
+        if self._n % self._flush_every == 0:
+            self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class StepTimer:
+    """EMA step timer with straggler detection."""
+
+    def __init__(self, ema: float = 0.9, straggler_factor: float = 3.0):
+        self.ema_s: Optional[float] = None
+        self._alpha = ema
+        self._factor = straggler_factor
+        self._t0: Optional[float] = None
+        self.stragglers = 0
+
+    def __enter__(self):
+        self._t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.time() - self._t0
+        if self.ema_s is not None and dt > self._factor * self.ema_s:
+            self.stragglers += 1
+        self.ema_s = dt if self.ema_s is None else (
+            self._alpha * self.ema_s + (1 - self._alpha) * dt)
+        self.last_s = dt
+        return False

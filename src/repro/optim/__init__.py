@@ -1,0 +1,30 @@
+"""Optimizers (pure JAX, optax-style (init, update) pairs) + compression."""
+
+from repro.optim.optimizers import (
+    OptState,
+    adafactor,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
+)
+from repro.optim.compression import topk_compress, topk_decompress, ErrorFeedbackState
+from repro.optim.schedule import cosine_schedule, warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adafactor",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "make_optimizer",
+    "momentum",
+    "sgd",
+    "topk_compress",
+    "topk_decompress",
+    "ErrorFeedbackState",
+    "cosine_schedule",
+    "warmup_cosine",
+]

@@ -1,0 +1,166 @@
+"""Optimizers as (init_fn, update_fn) pairs over arbitrary pytrees.
+
+update_fn(grads, state, params) -> (updates, new_state); caller applies
+``params + updates``. All state lives in pytrees so it shards/checkpoints
+like params. Adafactor implements factored second moments (row/col RMS) so
+trillion-parameter jobs (kimi-k2) keep optimizer state sublinear in the
+largest matrix dimension product.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimizerConfig
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: PyTree
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def sgd(lr: float):
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), ())
+
+    def update(grads, state, params=None):
+        updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, OptState(state.step + 1, ())
+
+    return init, update
+
+
+def momentum(lr: float, beta: float = 0.9):
+    def init(params):
+        m = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params=None):
+        m = jax.tree_util.tree_map(lambda mm, g: beta * mm + g, state.inner, grads)
+        updates = jax.tree_util.tree_map(lambda mm: -lr * mm, m)
+        return updates, OptState(state.step + 1, m)
+
+    return init, update
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    return adamw(lr, b1, b2, eps, weight_decay)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          lr_schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None):
+    def init(params):
+        m = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        v = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), (m, v))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        cur_lr = lr if lr_schedule is None else lr * lr_schedule(step)
+        m, v = state.inner
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), m, grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(mm, vv, p):
+            u = -cur_lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            if weight_decay:
+                u = u - cur_lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, OptState(step, (m, v))
+
+    return init, update
+
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, decay: float = 0.8,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    """Factored second-moment optimizer (Shazeer & Stern 2018), momentum-free.
+
+    For an (..., r, c) matrix keeps row/col RMS accumulators of shapes
+    (..., r) and (..., c): O(r+c) state instead of O(r*c). Vectors keep a
+    full accumulator (cheap).
+    """
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                return (jnp.zeros(p.shape[:-1], jnp.float32),      # row: reduce last dim
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))  # col
+            return (jnp.zeros_like(p, jnp.float32), None)
+
+        acc = jax.tree_util.tree_map(per_leaf, params, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        return OptState(jnp.zeros((), jnp.int32), acc)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def per_leaf(acc, g, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                row, col = acc
+                row = beta * row + (1 - beta) * g2.mean(axis=-1)
+                col = beta * col + (1 - beta) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                rfac = row / jnp.maximum(row.mean(axis=-1, keepdims=True), eps)
+                u = g32 / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(col)[..., None, :] + 1e-12)
+                new_acc = (row, col)
+            else:
+                full, _ = acc
+                full = beta * full + (1 - beta) * g2
+                u = g32 / (jnp.sqrt(full) + 1e-12)
+                new_acc = (full, None)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr * u
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype), new_acc
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state.inner)
+        out = [per_leaf(a, g, p) for a, g, p in zip(flat_a, flat_g, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        acc = treedef.unflatten([o[1] for o in out])
+        return updates, OptState(step, acc)
+
+    return init, update
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    """Resolve an OptimizerConfig into (init, update)."""
+    if cfg.name == "sgd":
+        return sgd(cfg.lr)
+    if cfg.name == "momentum":
+        return momentum(cfg.lr, cfg.momentum)
+    if cfg.name in ("adam", "adamw"):
+        return adamw(cfg.lr, cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay)
+    if cfg.name == "adafactor":
+        return adafactor(cfg.lr, weight_decay=cfg.weight_decay)
+    raise KeyError(f"unknown optimizer {cfg.name!r}")

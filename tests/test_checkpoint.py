@@ -1,0 +1,59 @@
+"""Checkpoint tests: roundtrip, atomicity, GC, pipeline-state restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+
+
+@pytest.fixture
+def tree():
+    return {"layer": {"w": jnp.arange(12.0).reshape(3, 4),
+                      "b": jnp.ones((4,), jnp.bfloat16)},
+            "opt": (jnp.zeros(3), jnp.asarray(7, jnp.int32))}
+
+
+def test_roundtrip(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 5, tree, extra={"cursor": 42})
+    step, restored, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 5 and extra == {"cursor": 42}
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)), tree, restored)
+    # dtypes preserved
+    assert restored["layer"]["b"].dtype == jnp.bfloat16
+
+
+def test_partial_saves_invisible(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    # fake a crashed save: step dir without the commit marker
+    os.makedirs(tmp_path / "step_0000000009")
+    with open(tmp_path / "step_0000000009" / "manifest.json", "w") as f:
+        f.write("{}")
+    step, _, _ = load_checkpoint(str(tmp_path), tree)
+    assert step == 1  # the uncommitted step 9 is ignored
+
+
+def test_manager_keeps_last_n(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_0000000003", "step_0000000004"]
+    assert mgr.latest_step() == 4
+
+
+def test_manager_gc_partial_on_init(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / ".tmp_step_9_abc")
+    CheckpointManager(str(tmp_path))
+    assert not any(n.startswith(".tmp_") for n in os.listdir(tmp_path))
+
+
+def test_restore_missing_raises(tmp_path, tree):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope"), tree)

@@ -1,0 +1,46 @@
+"""Gradient compression tests: top-k semantics + error-feedback convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import ErrorFeedbackState, topk_compress, topk_decompress
+
+
+def test_topk_keeps_largest_magnitudes():
+    g = {"w": jnp.asarray([0.1, -5.0, 0.01, 3.0, -0.2])}
+    (vals, idx), _ = topk_compress(g, ratio=0.4)
+    kept = set(np.asarray(idx["w"]).tolist())
+    assert kept == {1, 3}
+    dec = topk_decompress(vals, idx, g)
+    np.testing.assert_allclose(np.asarray(dec["w"]),
+                               [0.0, -5.0, 0.0, 3.0, 0.0])
+
+
+def test_error_feedback_accumulates_residual():
+    g = {"w": jnp.asarray([1.0, 0.5, 0.25, 0.1])}
+    ef = ErrorFeedbackState(jax.tree_util.tree_map(jnp.zeros_like, g))
+    total = jnp.zeros(4)
+    # repeatedly send the same gradient with 25% compression: over steps the
+    # error feedback must deliver ALL coordinates (bias -> 0)
+    for _ in range(12):
+        (vals, idx), ef = topk_compress(g, ratio=0.25, ef=ef)
+        total = total + topk_decompress(vals, idx, g)["w"]
+    delivered = total / 12
+    np.testing.assert_allclose(np.asarray(delivered), np.asarray(g["w"]),
+                               atol=0.15)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31), ratio=st.floats(0.05, 1.0))
+def test_compress_decompress_subset_identity(seed, ratio):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (40,)))}
+    (vals, idx), _ = topk_compress(g, ratio=ratio)
+    dec = topk_decompress(vals, idx, g)["w"]
+    mask = np.asarray(dec) != 0
+    # every delivered coordinate matches the original exactly
+    np.testing.assert_allclose(np.asarray(dec)[mask], np.asarray(g["w"])[mask])
+    # count = ceil(ratio * 40) (subject to at-least-one)
+    assert mask.sum() == max(1, round(ratio * 40))

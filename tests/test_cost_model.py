@@ -1,0 +1,65 @@
+"""Cost-model unit tests: Formulas 2-5 semantics + normalization invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+
+
+@pytest.fixture
+def pool():
+    return DevicePool.heterogeneous(num_devices=50, num_jobs=2, seed=0)
+
+
+def test_shifted_exponential_moments(pool):
+    """Formula 4: E[t] = tau*D*(a + 1/mu); min t >= tau*a*D."""
+    tau = 5.0
+    samples = pool.sample_times(0, tau, size=4000)          # (4000, K)
+    d = pool.data_sizes[:, 0]
+    shift = tau * pool.a * d
+    expected = tau * d * (pool.a + 1.0 / pool.mu)
+    assert np.all(samples >= shift[None, :] - 1e-9)
+    emp = samples.mean(axis=0)
+    np.testing.assert_allclose(emp, expected, rtol=0.15)
+    np.testing.assert_allclose(pool.expected_times(0, tau), expected)
+
+
+def test_round_time_is_max_of_selected(pool):
+    cm = CostModel(pool)
+    times = pool.expected_times(0, 5.0)
+    plan = np.zeros(50, dtype=bool)
+    plan[[3, 7, 11]] = True
+    assert cm.round_time(times, plan) == times[[3, 7, 11]].max()
+    assert cm.round_time(times, np.zeros(50, dtype=bool)) == 0.0
+
+
+def test_fairness_is_population_variance(pool):
+    cm = CostModel(pool)
+    counts = np.arange(50, dtype=float)
+    plan = np.zeros(50, dtype=bool)
+    plan[:10] = True
+    assert cm.fairness(counts, plan) == pytest.approx(np.var(counts + plan))
+
+
+def test_delta_fairness_preserves_argmin(pool):
+    """var(s+v) - var(s) shifts all candidates equally -> same argmin."""
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 10, 50).astype(float)
+    plans = np.zeros((20, 50), dtype=bool)
+    for i in range(20):
+        plans[i, rng.choice(50, 5, replace=False)] = True
+    cm_abs = CostModel(pool, delta_fairness=False)
+    cm_dlt = CostModel(pool, delta_fairness=True)
+    t = pool.expected_times(0, 5.0)
+    c_abs = cm_abs.cost_batch(t, counts, plans)
+    c_dlt = cm_dlt.cost_batch(t, counts, plans)
+    assert np.argmin(c_abs) == np.argmin(c_dlt)
+    np.testing.assert_allclose(c_abs - c_dlt, (c_abs - c_dlt)[0])
+
+
+def test_calibration_scales(pool):
+    cm = CostModel(pool)
+    cm.calibrate([5.0, 5.0], n_sel=5)
+    assert cm.time_scale > 0
+    assert 0 < cm.fairness_scale <= 0.25

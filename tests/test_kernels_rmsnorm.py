@@ -1,0 +1,36 @@
+"""Fused RMSNorm kernel vs oracle sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.rmsnorm import rmsnorm
+
+CASES = [
+    ((4, 37, 256), 64),
+    ((128, 512), 128),
+    ((1, 1, 1024), 8),
+    ((3, 5, 7, 64), 16),   # rows not a multiple of block (pad path)
+]
+
+
+@pytest.mark.parametrize("shape,block", CASES)
+def test_rmsnorm_matches_oracle(shape, block):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = jnp.asarray(rng.normal(0, 2, shape), jnp.float32)
+    s = jnp.asarray(rng.normal(1, 0.1, shape[-1:]), jnp.float32)
+    out = rmsnorm(x, s, block_rows=block, interpret=True)
+    exp = ref.rmsnorm(x, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 2e-2), (jnp.float32, 1e-5)])
+def test_rmsnorm_dtypes(dtype, tol):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 2, (32, 128)), dtype)
+    s = jnp.asarray(rng.normal(1, 0.1, (128,)), jnp.float32)
+    out = rmsnorm(x, s, interpret=True)
+    exp = ref.rmsnorm(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)

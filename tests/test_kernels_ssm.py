@@ -1,0 +1,74 @@
+"""Chunked linear-scan kernel vs sequential-oracle sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ssm_scan import linear_scan
+
+CASES = [
+    (2, 128, 2, 16, 32, 32),
+    (1, 256, 4, 32, 64, 64),
+    (2, 64, 1, 8, 8, 16),
+    (1, 128, 3, 16, 48, 128),   # single chunk == whole sequence
+]
+
+
+@pytest.mark.parametrize("B,S,H,Dk,Dv,chunk", CASES)
+def test_scan_matches_oracle(B, S, H, Dk, Dv, chunk):
+    rng = np.random.default_rng(hash((B, S, H, Dk)) % 2**31)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 0.5, (B, S, H, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, Dv)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.6, 1.0, (B, S, H)), jnp.float32)
+    y, (Sf, nf) = linear_scan(q, k, v, a, chunk=chunk, interpret=True)
+    ye, (Se, ne) = ref.linear_scan(q, k, v, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(Se), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(nf), np.asarray(ne), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,Dk,Dv,chunk", [
+    (2, 128, 2, 16, 32, 32), (1, 256, 3, 8, 24, 128), (2, 64, 1, 8, 8, 64)])
+def test_chunked_jnp_matches_oracle(B, S, H, Dk, Dv, chunk):
+    """linear_scan_chunked (the data-plane default) vs the sequential oracle."""
+    rng = np.random.default_rng(hash((B, S, chunk)) % 2**31)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 0.5, (B, S, H, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, Dv)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (B, S, H)), jnp.float32)
+    y, (Sf, nf) = ref.linear_scan_chunked(q, k, v, a, chunk=chunk)
+    ye, (Se, ne) = ref.linear_scan(q, k, v, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(Se), atol=3e-4, rtol=3e-4)
+
+
+def test_scan_strong_decay_stability():
+    """Near-zero decays underflow naive cumprod ratios; log-space must hold."""
+    rng = np.random.default_rng(5)
+    B, S, H, Dk, Dv = 1, 128, 2, 8, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 0.5, (B, S, H, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, Dv)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    y, _ = linear_scan(q, k, v, a, chunk=32, interpret=True)
+    ye, _ = ref.linear_scan(q, k, v, a)
+    assert bool(jnp.isfinite(y).all())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4, rtol=2e-4)
+
+
+def test_decode_step_continues_prefill():
+    """linear_scan final state + one linear_scan_step == oracle over S+1."""
+    rng = np.random.default_rng(9)
+    B, S, H, Dk, Dv = 2, 64, 2, 8, 16
+    mk = lambda *s: jnp.asarray(rng.normal(0, 0.5, s), jnp.float32)
+    q, k = mk(B, S + 1, H, Dk), mk(B, S + 1, H, Dk)
+    v = mk(B, S + 1, H, Dv)
+    a = jnp.asarray(rng.uniform(0.6, 1.0, (B, S + 1, H)), jnp.float32)
+    y_all, _ = ref.linear_scan(q, k, v, a)
+    _, state = linear_scan(q[:, :S], k[:, :S], v[:, :S], a[:, :S],
+                           chunk=32, interpret=True)
+    y_step, _ = ref.linear_scan_step(q[:, S], k[:, S], v[:, S], a[:, S], state)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_all[:, S]),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,35 @@
+"""Loss-curve fitting (paper Formula 13) tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.loss_estimation import fit_loss_curve, rounds_to_target
+
+
+def test_fit_recovers_synthetic_curve():
+    b0, b1, b2 = 0.05, 0.4, 0.3
+    r = np.arange(1, 60)
+    loss = 1.0 / (b0 * r + b1) + b2
+    fb0, fb1, fb2 = fit_loss_curve(r, loss)
+    est = 1.0 / (fb0 * r + fb1) + fb2
+    np.testing.assert_allclose(est, loss, rtol=0.08)
+
+
+def test_rounds_to_target_monotone_in_target():
+    b0, b1, b2 = 0.05, 0.4, 0.3
+    r_easy = rounds_to_target(b0, b1, b2, target_loss=1.0)
+    r_hard = rounds_to_target(b0, b1, b2, target_loss=0.5)
+    assert r_hard > r_easy
+
+
+def test_rounds_to_target_includes_safety_margin():
+    b0, b1, b2 = 0.05, 0.4, 0.0
+    target = 0.5
+    rc = (1.0 / target - b1) / b0
+    assert rounds_to_target(b0, b1, b2, target) == pytest.approx(
+        np.ceil(1.3 * rc), abs=1)
+
+
+def test_unreachable_target_caps_at_max():
+    assert rounds_to_target(0.05, 0.4, 0.3, target_loss=0.2,
+                            max_rounds=500) == 500

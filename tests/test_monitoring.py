@@ -1,0 +1,54 @@
+"""Monitoring substrate tests: metrics JSONL, step timing, audit replay."""
+
+import json
+import time
+
+import numpy as np
+
+from repro.monitoring import MetricsLogger, SchedulerAudit, StepTimer
+from repro.monitoring.audit import replay
+
+
+def test_metrics_jsonl_roundtrip(tmp_path):
+    p = tmp_path / "metrics.jsonl"
+    log = MetricsLogger(str(p))
+    log.log(1, {"loss": 2.5}, lr=1e-3)
+    log.log(2, {"loss": 2.4})
+    log.close()
+    lines = [json.loads(l) for l in open(p)]
+    assert lines[0]["step"] == 1 and lines[0]["loss"] == 2.5 and lines[0]["lr"] == 1e-3
+    assert lines[1]["step"] == 2
+
+
+def test_step_timer_ema_and_stragglers():
+    t = StepTimer(ema=0.5, straggler_factor=2.0)
+    for _ in range(3):
+        with t:
+            time.sleep(0.01)
+    assert 0.005 < t.ema_s < 0.05
+    with t:
+        time.sleep(0.08)  # > 2x EMA -> straggler
+    assert t.stragglers == 1
+
+
+def test_audit_log_with_engine(tmp_path):
+    from repro.config.base import ArchFamily, JobConfig, ModelConfig
+    from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
+    from repro.fl.runtime import SyntheticRuntime
+
+    jobs = [JobConfig(job_id=0,
+                      model=ModelConfig(name="t", family=ArchFamily.CNN,
+                                        cnn_spec=(("flatten",),),
+                                        input_shape=(4, 4, 1), num_classes=10),
+                      target_metric=0.7, max_rounds=10)]
+    pool = DevicePool.heterogeneous(20, 1, seed=0)
+    cm = CostModel(pool)
+    cm.calibrate([5.0], n_sel=3)
+    audit = SchedulerAudit(str(tmp_path / "audit.jsonl"))
+    eng = MultiJobEngine(jobs, pool, cm, get_scheduler("random", cost_model=cm),
+                         SyntheticRuntime(1, 20), n_sel=3)
+    eng.run(on_round=audit.on_round)
+    audit.close()
+    recs = replay(str(tmp_path / "audit.jsonl"))
+    assert len(recs) == len(eng.records)
+    assert all(len(r["devices"]) == 3 for r in recs)

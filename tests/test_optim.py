@@ -1,0 +1,77 @@
+"""Optimizer tests: convergence on a quadratic, state shapes, clipping, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+from repro.config.base import OptimizerConfig
+
+
+def quad_loss(p):
+    return sum(jnp.sum((leaf - 3.0) ** 2) for leaf in jax.tree_util.tree_leaves(p))
+
+
+PARAMS = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+
+
+@pytest.mark.parametrize("opt", [
+    sgd(0.1), momentum(0.05, 0.9), adamw(0.3), adafactor(0.5)])
+def test_optimizers_converge_on_quadratic(opt):
+    init, update = opt
+    p = PARAMS
+    st = init(p)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(p)
+        up, st = update(g, st, p)
+        p = jax.tree_util.tree_map(lambda a, b: a + b, p, up)
+    assert quad_loss(p) < 0.1 * quad_loss(PARAMS)
+
+
+def test_adafactor_state_is_factored():
+    init, _ = adafactor(0.1)
+    st = init({"w": jnp.zeros((64, 32))})
+    row, col = st.inner["w"]
+    assert row.shape == (64,)
+    assert col.shape == (32,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert norm == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    cn = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(cn) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_clip_noop_below_threshold():
+    g = {"a": jnp.full((4,), 0.01)}
+    clipped, _ = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), np.asarray(g["a"]))
+
+
+def test_make_optimizer_resolves_all():
+    for name in ("sgd", "momentum", "adam", "adamw", "adafactor"):
+        init, update = make_optimizer(OptimizerConfig(name=name, lr=0.1))
+        st = init(PARAMS)
+        up, _ = update(PARAMS, st, PARAMS)
+        assert jax.tree_util.tree_structure(up) == jax.tree_util.tree_structure(PARAMS)
+
+
+def test_schedules_shape():
+    cos = cosine_schedule(100)
+    assert float(cos(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+    wc = warmup_cosine(10, 110)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0)

@@ -1,0 +1,49 @@
+"""Data-partitioner tests (the paper's §5 IID / non-IID setups)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import make_classification_dataset
+from repro.fl.partition import device_label_histogram, iid_partition, noniid_partition
+
+
+def test_noniid_two_classes_per_device():
+    _, y = make_classification_dataset(8000, (4, 4, 1), 10, seed=0)
+    part = noniid_partition(y, 100, classes_per_device=2, parts_per_class=20, seed=1)
+    hist = device_label_histogram(y, part, 10)
+    classes_per_dev = (hist > 0).sum(axis=1)
+    assert np.all(classes_per_dev <= 2)
+    assert np.all(classes_per_dev >= 1)
+
+
+def test_noniid_covers_all_classes_globally():
+    _, y = make_classification_dataset(8000, (4, 4, 1), 10, seed=0)
+    part = noniid_partition(y, 100, seed=1)
+    hist = device_label_histogram(y, part, 10)
+    assert np.all(hist.sum(axis=0) > 0)
+
+
+def test_iid_devices_see_most_classes():
+    _, y = make_classification_dataset(8000, (4, 4, 1), 10, seed=0)
+    part = iid_partition(y, 50, 200, seed=1)
+    hist = device_label_histogram(y, part, 10)
+    assert ((hist > 0).sum(axis=1) >= 8).mean() > 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), num_devices=st.integers(5, 60))
+def test_partition_indices_in_range(seed, num_devices):
+    _, y = make_classification_dataset(4000, (2, 2, 1), 10, seed=0)
+    part = noniid_partition(y, num_devices, seed=seed)
+    assert part.min() >= 0 and part.max() < 4000
+    assert part.shape[0] == num_devices
+
+
+def test_train_eval_share_prototypes():
+    x1, y1 = make_classification_dataset(100, (4, 4, 1), 10, noise=0.0, seed=0)
+    x2, y2 = make_classification_dataset(100, (4, 4, 1), 10, noise=0.0, seed=99)
+    # zero-noise samples of the same class must be identical across splits
+    c = y1[0]
+    j = np.flatnonzero(y2 == c)
+    assert j.size > 0
+    np.testing.assert_allclose(x1[0], x2[j[0]])

@@ -1,0 +1,128 @@
+"""Scheduler tests: plan invariants (property-based) + behavioural checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+from repro.core.plans import random_plans, repair_plan, validate_plan
+from repro.core.schedulers import get_scheduler, list_schedulers
+from repro.core.schedulers.base import SchedulingContext
+
+
+def make_ctx(pool, job=0, n_sel=5, occupied=None, counts=None, round_idx=0):
+    K = pool.num_devices
+    avail = np.ones(K, dtype=bool)
+    if occupied is not None:
+        avail[occupied] = False
+    return SchedulingContext(
+        job=job, round_idx=round_idx, tau=5.0, n_sel=n_sel,
+        available=avail,
+        counts=counts if counts is not None else np.zeros(K),
+        expected_times=pool.expected_times(job, 5.0))
+
+
+FAST_SCHEDULERS = ["random", "greedy", "fedcs", "genetic", "sa", "bods"]
+
+
+@pytest.mark.parametrize("name", FAST_SCHEDULERS)
+def test_plan_invariants_all_schedulers(name):
+    """Every scheduler returns exactly n_sel available devices, always."""
+    pool = DevicePool.heterogeneous(40, 2, seed=1)
+    cm = CostModel(pool)
+    cm.calibrate([5.0, 5.0], n_sel=4)
+    sched = get_scheduler(name, cost_model=cm, seed=0)
+    rng = np.random.default_rng(0)
+    counts = np.zeros(40)
+    for r in range(8):
+        occ = rng.choice(40, rng.integers(0, 20), replace=False)
+        ctx = make_ctx(pool, n_sel=4, occupied=occ, counts=counts, round_idx=r)
+        plan = sched.schedule(ctx)
+        validate_plan(plan, ctx.available, 4)
+        sched.observe(ctx, plan, float(rng.random()))
+        counts += plan
+
+
+def test_rlds_plan_invariants():
+    pool = DevicePool.heterogeneous(30, 2, seed=1)
+    cm = CostModel(pool)
+    cm.calibrate([5.0, 5.0], n_sel=3)
+    sched = get_scheduler("rlds", cost_model=cm, seed=0, pretrain_rounds=10)
+    rng = np.random.default_rng(0)
+    for r in range(5):
+        occ = rng.choice(30, 10, replace=False)
+        ctx = make_ctx(pool, n_sel=3, occupied=occ, round_idx=r)
+        plan = sched.schedule(ctx)
+        validate_plan(plan, ctx.available, 3)
+        sched.observe(ctx, plan, 1.0)
+
+
+def test_greedy_selects_fastest():
+    pool = DevicePool.heterogeneous(30, 1, seed=2)
+    cm = CostModel(pool)
+    sched = get_scheduler("greedy", cost_model=cm, seed=0)
+    ctx = make_ctx(pool, n_sel=5)
+    plan = sched.schedule(ctx)
+    t = ctx.expected_times
+    assert set(np.flatnonzero(plan)) == set(np.argsort(t)[:5])
+
+
+def test_bods_beats_random_on_estimated_cost():
+    """After warm-up, BODS round cost should beat random's average."""
+    pool = DevicePool.heterogeneous(60, 1, seed=3)
+    cm = CostModel(pool, alpha=4.0, beta=0.25)
+    cm.calibrate([5.0], n_sel=6)
+    bods = get_scheduler("bods", cost_model=cm, seed=0)
+    rng = np.random.default_rng(0)
+    counts = np.zeros(60)
+    bods_costs, rand_costs = [], []
+    for r in range(25):
+        ctx = make_ctx(pool, n_sel=6, counts=counts, round_idx=r)
+        plan = bods.schedule(ctx)
+        c = float(bods._own_cost_of(ctx, plan[None])[0])
+        bods.observe(ctx, plan, c)
+        bods_costs.append(c)
+        rp = random_plans(rng, ctx.available, 6, 1)[0]
+        rand_costs.append(float(bods._own_cost_of(ctx, rp[None])[0]))
+        counts += plan
+    assert np.mean(bods_costs[5:]) < np.mean(rand_costs[5:])
+
+
+# ---- hypothesis property tests on the plan utilities ----
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data(), k=st.integers(10, 60), n_sel=st.integers(1, 8))
+def test_repair_plan_always_feasible(data, k, n_sel):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    available = np.array(data.draw(st.lists(st.booleans(), min_size=k, max_size=k)))
+    if available.sum() < n_sel:
+        available[:n_sel] = True
+    raw = np.array(data.draw(st.lists(st.booleans(), min_size=k, max_size=k)))
+    fixed = repair_plan(rng, raw.copy(), available, n_sel)
+    validate_plan(fixed, available, n_sel)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31), n_sel=st.integers(1, 10), count=st.integers(1, 8))
+def test_random_plans_valid(seed, n_sel, count):
+    rng = np.random.default_rng(seed)
+    available = rng.random(40) < 0.7
+    if available.sum() < n_sel:
+        available[:n_sel] = True
+    plans = random_plans(rng, available, n_sel, count)
+    for p in plans:
+        validate_plan(p, available, n_sel)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_fairness_batch_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    pool = DevicePool.heterogeneous(25, 1, seed=0)
+    cm = CostModel(pool, delta_fairness=False)
+    counts = rng.integers(0, 6, 25).astype(float)
+    plans = random_plans(rng, np.ones(25, bool), 5, 4)
+    batch = cm.fairness_batch(counts, plans)
+    for i, p in enumerate(plans):
+        assert batch[i] == pytest.approx(cm.fairness(counts, p))

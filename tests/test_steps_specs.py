@@ -1,0 +1,60 @@
+"""input_specs / batch_axes / opt_state_axes consistency across every
+(arch × shape) cell — structure-level checks, no compilation."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import SHAPES, get_arch, shape_applicable
+from repro.config.base import OptimizerConfig
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.steps import batch_axes, input_specs, opt_state_axes
+from repro.models.layers import abstract_init
+from repro.models.transformer import lm_init
+from repro.optim import make_optimizer
+
+CELLS = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES
+         if shape_applicable(get_arch(a), SHAPES[s])]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_specs_and_axes_trees_match(arch, shape):
+    cfg = get_arch(arch)
+    sc = SHAPES[shape]
+    specs = input_specs(cfg, sc)
+    axes = batch_axes(cfg, sc)
+    # every spec leaf must have a same-rank axes entry
+    flat_specs = jax.tree_util.tree_leaves(specs)
+    flat_axes = jax.tree_util.tree_structure(specs).flatten_up_to(axes)
+    assert len(flat_specs) == len(flat_axes)
+    for s, a in zip(flat_specs, flat_axes):
+        assert len(a) == len(s.shape), (arch, shape, s.shape, a)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_abstract_init_axes_cover_params(arch):
+    cfg = get_arch(arch)
+    with abstract_init():
+        params, axes = lm_init(cfg, 0)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_a = jax.tree_util.tree_structure(params).flatten_up_to(axes)
+    assert len(flat_p) == len(flat_a)
+    for p, a in zip(flat_p, flat_a):
+        assert len(a) == len(p.shape), (arch, p.shape, a)
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor", "sgd", "momentum"])
+def test_opt_state_axes_structure(opt):
+    cfg = get_arch("qwen3-1.7b")
+    with abstract_init():
+        params, axes = lm_init(cfg, 0)
+    oc = OptimizerConfig(name=opt)
+    init, _ = make_optimizer(oc)
+    opt_shapes = jax.eval_shape(init, params)
+    o_axes = opt_state_axes(cfg, axes, oc)
+    # inner axes tree must flatten against the inner state tree
+    if opt in ("adamw",):
+        inner_a = jax.tree_util.tree_structure(
+            opt_shapes.inner).flatten_up_to(o_axes["inner"])
+        inner_s = jax.tree_util.tree_leaves(opt_shapes.inner)
+        assert len(inner_a) == len(inner_s)
