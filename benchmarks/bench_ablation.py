@@ -5,39 +5,33 @@ greedy/fast-device selection — faster rounds but an accuracy ceiling under
 non-IID; with fairness both speed AND final accuracy hold.
 Also sweeps the cost-combination form (the paper reports the linear
 combination beats sum-of-squares and multiplicative variants).
+
+Each (alpha, beta) cell is the same ``ExperimentSpec`` with a different
+``CostSpec`` — the ablation axis is declarative.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.config.base import ArchFamily, JobConfig, ModelConfig
-from repro.core.cost import CostModel
-from repro.core.devices import DevicePool
-from repro.core.multijob import MultiJobEngine
-from repro.core.schedulers import get_scheduler
-from repro.fl.runtime import SyntheticRuntime
+from repro.experiment import CostSpec, ExperimentSpec, JobSpec, PoolSpec
 
 
 def _run(alpha, beta, seed=1):
-    jobs = [JobConfig(job_id=i,
-                      model=ModelConfig(name=f"j{i}", family=ArchFamily.CNN,
-                                        cnn_spec=(("flatten",),),
-                                        input_shape=(4, 4, 1), num_classes=10),
-                      target_metric=0.8, max_rounds=150) for i in range(3)]
-    pool = DevicePool.heterogeneous(100, 3, seed=seed)
-    cm = CostModel(pool, alpha=alpha, beta=beta)
-    cm.calibrate([5.0] * 3, n_sel=10)
-    sched = get_scheduler("bods", cost_model=cm, seed=0)
-    rt = SyntheticRuntime(num_jobs=3, num_devices=100, seed=2)
-    eng = MultiJobEngine(jobs, pool, cm, sched, rt, n_sel=10)
-    eng.run()
-    s = eng.summary()
+    spec = ExperimentSpec(
+        name=f"ablation-a{alpha}-b{beta}",
+        jobs=tuple(JobSpec(name=f"j{i}", target_metric=0.8, max_rounds=150)
+                   for i in range(3)),
+        pool=PoolSpec(num_devices=100, seed=seed),
+        cost=CostSpec(alpha=alpha, beta=beta),
+        scheduler="bods", runtime="synthetic",
+        runtime_kwargs={"seed": 2}, n_sel=10)
+    res = spec.run()
+    s = res.summary
     acc = float(np.mean([v["best_accuracy"] for v in s.values()]))
     t2t = [v["time_to_target"] for v in s.values()]
-    mk = max(v["makespan"] for v in s.values())
-    rt_mean = float(np.mean([r.round_time for r in eng.records]))
-    return acc, t2t, mk, rt_mean
+    rt_mean = float(np.mean([r.round_time for r in res.records]))
+    return acc, t2t, res.makespan, rt_mean
 
 
 def main():

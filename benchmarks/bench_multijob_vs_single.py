@@ -2,51 +2,34 @@
 
 Sequential baseline: each job runs ALONE on the full pool (FedAvg/random
 selection), one after another; total time = sum of per-job times. MJ-FL runs
-the same jobs in parallel on the shared pool.
+the same jobs in parallel on the shared pool. Both arms are the same
+``ExperimentSpec`` with a different job tuple / scheduler name.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.config.base import ArchFamily, JobConfig, ModelConfig
-from repro.core.cost import CostModel
-from repro.core.devices import DevicePool
-from repro.core.multijob import MultiJobEngine
-from repro.core.schedulers import get_scheduler
-from repro.fl.runtime import SyntheticRuntime
+from repro.experiment import ExperimentSpec, JobSpec, PoolSpec
 
 
-def _jobs(n=3, target=0.8, max_rounds=150):
-    mc = ModelConfig(name="job", family=ArchFamily.CNN, cnn_spec=(("flatten",),),
-                     input_shape=(4, 4, 1), num_classes=10)
-    return [JobConfig(job_id=i, model=mc, target_metric=target,
-                      max_rounds=max_rounds) for i in range(n)]
-
-
-def _run(jobs, scheduler, seed=1, n_sel=10):
-    pool = DevicePool.heterogeneous(100, len(jobs), seed=seed)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
-    cm.calibrate([5.0] * len(jobs), n_sel=n_sel)
-    sched = get_scheduler(scheduler, cost_model=cm, seed=0)
-    rt = SyntheticRuntime(num_jobs=len(jobs), num_devices=100, seed=2)
-    eng = MultiJobEngine(jobs, pool, cm, sched, rt, n_sel=n_sel)
-    eng.run()
-    return eng
+def _spec(n_jobs: int, scheduler: str, seed: int = 1, n_sel: int = 10,
+          target: float = 0.8, max_rounds: int = 150) -> ExperimentSpec:
+    return ExperimentSpec(
+        name=f"mj-vs-sj-{n_jobs}job-{scheduler}",
+        jobs=tuple(JobSpec(name="job", target_metric=target,
+                           max_rounds=max_rounds) for _ in range(n_jobs)),
+        pool=PoolSpec(num_devices=100, seed=seed),
+        scheduler=scheduler, runtime="synthetic",
+        runtime_kwargs={"seed": 2}, n_sel=n_sel)
 
 
 def main():
     print("\n== Table 5: MJ-FL (parallel) vs SJ-FL (sequential) ==")
     # Sequential: jobs one at a time; total = sum of makespans.
-    seq_total = 0.0
-    for i in range(3):
-        eng = _run(_jobs(1), "random", seed=1 + i)
-        seq_total += max(v["makespan"] for v in eng.summary().values())
+    seq_total = sum(_spec(1, "random", seed=1 + i).run().makespan
+                    for i in range(3))
     rows = [("SJ-FL sequential (random)", seq_total)]
     for sched in ("random", "bods", "rlds"):
-        eng = _run(_jobs(3), sched)
-        mk = max(v["makespan"] for v in eng.summary().values())
-        rows.append((f"MJ-FL parallel ({sched})", mk))
+        rows.append((f"MJ-FL parallel ({sched})", _spec(3, sched).run().makespan))
     base = rows[0][1]
     for name, t in rows:
         print(f"{name:32s} total={t/60:9.1f} min  speedup_vs_seq={base/t:5.2f}x")

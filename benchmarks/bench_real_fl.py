@@ -6,45 +6,22 @@ two-job groups with actual vmap'd local SGD + FedAvg under each scheduler.
 The paper's Tables 1-2 setting in miniature: simulated wall-clock, REAL
 accuracy. The scheduler-plane benchmark (bench_groups.py) is the fast
 default; this one validates that the ordering holds under real learning.
+Each scheduler arm is the ``real-fl-two-job`` preset with a different
+scheduler name.
 """
 
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from repro.config.base import JobConfig
-from repro.configs.paper_models import cnn_b, lenet5
-from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
-from repro.data.synthetic import make_classification_dataset
-from repro.fl.partition import noniid_partition
-from repro.fl.runtime import FLJobRuntime, MultiRuntime
+from repro.experiment import get_preset
 
 
 def run(scheduler: str, rounds: int, devices: int = 40, seed: int = 5):
-    jobs, runtimes = [], []
-    for jid, (mk, target) in enumerate(((lenet5, 0.95), (cnn_b, 0.85))):
-        cfg = mk()
-        x, y = make_classification_dataset(8000, cfg.input_shape,
-                                           cfg.num_classes, noise=1.2, seed=jid)
-        ex, ey = make_classification_dataset(800, cfg.input_shape,
-                                             cfg.num_classes, noise=1.2,
-                                             seed=100 + jid)
-        part = noniid_partition(y, devices, seed=jid)
-        job = JobConfig(job_id=jid, model=cfg, target_metric=target,
-                        max_rounds=rounds, local_epochs=3, batch_size=32,
-                        lr=0.02)
-        jobs.append(job)
-        runtimes.append(FLJobRuntime(job, x, y, part, ex, ey, seed=jid))
-    pool = DevicePool.heterogeneous(devices, len(jobs), seed=seed)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
-    cm.calibrate([3.0] * len(jobs), n_sel=5)
-    eng = MultiJobEngine(jobs, pool, cm,
-                         get_scheduler(scheduler, cost_model=cm, seed=0),
-                         MultiRuntime(runtimes), n_sel=5)
-    eng.run()
-    return eng.summary()
+    spec = get_preset("real-fl-two-job", scheduler=scheduler, rounds=rounds,
+                      num_devices=devices, seed=seed,
+                      lenet_target=0.95, cnn_target=0.85)
+    return spec.run().summary
 
 
 def main():

@@ -1,64 +1,33 @@
-"""Shared benchmark harness: one engine run per (group, distribution, scheduler)."""
+"""Shared benchmark harness: one ``ExperimentSpec`` per (group, distribution,
+scheduler) cell, materialized from the ``paper-group-*`` presets.
+
+The group tables (per-job targets + convergence rates) live in
+``repro.experiment.presets.PAPER_GROUPS`` — the single source of truth shared
+with the CLI. ``run_group`` is now a thin wrapper: build the spec, run it,
+return the legacy dict shape the table printers consume. Per-job convergence
+rates flow through ``JobSpec.convergence_rate`` into the synthetic runtime's
+per-job ``b0`` array (LeNet really does converge faster than VGG now).
+"""
 
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+from typing import Dict
 
-import numpy as np
+from repro.experiment.presets import PAPER_GROUPS, paper_group
 
-from repro.config.base import ArchFamily, JobConfig, ModelConfig
-from repro.core.cost import CostModel
-from repro.core.devices import DevicePool
-from repro.core.multijob import MultiJobEngine
-from repro.core.schedulers import get_scheduler
-from repro.fl.runtime import SyntheticRuntime
-
-# Paper groups in scheduler-benchmark form: per-job complexity is encoded as
-# (tau-equivalent compute weight, convergence rate, target). Complexity
-# ordering follows the paper: LeNet < CNN < VGG; AlexNet < CNN-B < ResNet.
-# (job, target_noniid, target_iid, convergence_rate). Non-IID targets sit
-# ABOVE greedy's starvation ceiling (~0.73-0.76) and safely below the
-# fair schedulers' ceiling so the paper's accuracy separation is the thing
-# being measured, not seed luck at the asymptote.
-GROUPS = {
-    "A": [("vgg16", 0.54, 0.54, 0.06), ("cnn-a", 0.78, 0.79, 0.12),
-          ("lenet5", 0.79, 0.84, 0.20)],
-    "B": [("resnet18", 0.58, 0.59, 0.08), ("cnn-b", 0.72, 0.72, 0.12),
-          ("alexnet", 0.78, 0.84, 0.18)],
-}
+GROUPS = PAPER_GROUPS
 
 SCHEDULERS = ["random", "fedcs", "genetic", "greedy", "bods", "rlds"]
 
 
-def run_group(group: str, scheduler: str, non_iid: bool, seed: int = 1,
-              num_devices: int = 100, n_sel: int = 10,
-              max_rounds: int = 150) -> Dict:
-    spec = GROUPS[group]
-    jobs = []
-    for i, (name, t_noniid, t_iid, rate) in enumerate(spec):
-        mc = ModelConfig(name=name, family=ArchFamily.CNN,
-                         cnn_spec=(("flatten",),), input_shape=(4, 4, 1),
-                         num_classes=10)
-        jobs.append(JobConfig(job_id=i, model=mc,
-                              target_metric=t_noniid if non_iid else t_iid,
-                              max_rounds=max_rounds, local_epochs=5))
-    pool = DevicePool.heterogeneous(num_devices, len(jobs), seed=seed)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
-    cm.calibrate([5.0] * len(jobs), n_sel=n_sel)
-    sched = get_scheduler(scheduler, cost_model=cm, seed=0)
-    rt = SyntheticRuntime(num_jobs=len(jobs), num_devices=num_devices,
-                          classes_per_device=(2 if non_iid else 10),
-                          seed=2)
-    # per-job convergence rates
-    rt_rates = {i: spec[i][3] for i in range(len(spec))}
-    rt.b0 = np.mean(list(rt_rates.values()))
-    t0 = time.time()
-    eng = MultiJobEngine(jobs, pool, cm, sched, rt, n_sel=n_sel)
-    eng.run()
-    out = {"wall_s": time.time() - t0, "summary": eng.summary(),
-           "records": eng.records}
-    return out
+group_spec = paper_group  # the preset factory IS the benchmark spec factory
+
+
+def run_group(group: str, scheduler: str, non_iid: bool, **kwargs) -> Dict:
+    res = paper_group(group, scheduler=scheduler, non_iid=non_iid,
+                      **kwargs).run()
+    return {"wall_s": res.wall_s, "summary": res.summary,
+            "records": res.records}
 
 
 def fmt_time(t):

@@ -7,6 +7,13 @@ Emits human tables + machine CSV lines (prefix "CSV,").
 Table map: groups -> paper Tables 1-2 (+Figs 3,5,6,7 trajectories as CSV),
 mj_vs_sj -> Table 5, ablation -> appendix fairness ablation,
 roofline -> EXPERIMENTS.md §Roofline source data.
+
+Every engine-backed section is spec-driven: each cell is a declarative
+``repro.experiment.ExperimentSpec`` (see ``benchmarks/common.py``), so any
+table cell can be re-run standalone, e.g.:
+
+  PYTHONPATH=src python -m repro.experiment.cli preset paper-group-a \\
+      --arg scheduler=rlds --arg non_iid=true --run
 """
 
 from __future__ import annotations

@@ -10,6 +10,11 @@ present (falling back to 6·N·D/peak estimates); "data fairness" -> balanced
 data-shard participation per job. BODS then minimizes the same
 time+fairness TotalCost — the paper's control plane, unchanged, driving an
 LLM cluster.
+
+Declaratively: each arch is a ``JobSpec`` (model resolved through the arch
+registry), the per-arch step cost folds into the pool via
+``PoolSpec.job_weights``, and ``spec.build()`` exposes the live engine for
+the utilization readout.
 """
 
 import json
@@ -18,10 +23,8 @@ import os
 import numpy as np
 
 from repro.config import get_arch
-from repro.config.base import ArchFamily, JobConfig
 from repro.configs import ASSIGNED_ARCHS
-from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
-from repro.fl.runtime import SyntheticRuntime
+from repro.experiment import ExperimentSpec, JobSpec, PoolSpec
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
 
@@ -41,36 +44,30 @@ def step_time_s(arch: str) -> float:
 def main():
     archs = list(ASSIGNED_ARCHS)
     num_slices = 64  # the cluster is carved into 64 schedulable slices
-    jobs = []
-    for i, arch in enumerate(archs):
-        cfg = get_arch(arch)
-        jobs.append(JobConfig(job_id=i, model=cfg, target_metric=0.8,
-                              max_rounds=40, local_epochs=1))
-
-    pool = DevicePool.heterogeneous(num_slices, len(jobs), seed=3,
-                                    a_range=(8e-4, 3e-3), data_range=(80, 200))
     # fold the per-arch step cost into each job's data sizes: slower models
     # need proportionally more slice-seconds per scheduling quantum
     base = np.array([step_time_s(a) for a in archs])
-    pool.data_sizes = pool.data_sizes * (base / base.mean())[None, :]
-
-    cost = CostModel(pool, alpha=4.0, beta=0.25)
-    cost.calibrate([1.0] * len(jobs), n_sel=6)
-    engine = MultiJobEngine(
-        jobs, pool, cost, get_scheduler("bods", cost_model=cost, seed=0),
-        SyntheticRuntime(num_jobs=len(jobs), num_devices=num_slices, seed=7),
+    spec = ExperimentSpec(
+        name="cluster-schedule-bods",
+        jobs=tuple(JobSpec(name=a, model=a, target_metric=0.8, max_rounds=40,
+                           local_epochs=1) for a in archs),
+        pool=PoolSpec(num_devices=num_slices, seed=3, a_range=(8e-4, 3e-3),
+                      data_range=(80, 200),
+                      job_weights=tuple(base / base.mean())),
+        scheduler="bods", runtime="synthetic", runtime_kwargs={"seed": 7},
         n_sel=6)
-    engine.run()
+    exp = spec.build()
+    result = exp.run()
+    engine = exp.engine
 
     print(f"{'job (arch)':20s} {'rounds':>6s} {'slice-hours':>12s} {'makespan_h':>11s}")
-    for name, v in engine.summary().items():
+    for name, v in result.summary.items():
         print(f"{name:20s} {v['rounds']:6d} {v['total_round_time']*6/3600:12.2f} "
               f"{v['makespan']/3600:11.2f}")
-    util = engine.counts.sum() / (num_slices * max(
-        v['makespan'] for v in engine.summary().values()) /
-        np.mean([r.round_time for r in engine.records]))
+    util = engine.counts.sum() / (num_slices * result.makespan /
+        np.mean([r.round_time for r in result.records]))
     print(f"\ncluster slice utilization proxy: {util*100:.0f}% "
-          f"({len(engine.records)} scheduling decisions)")
+          f"({len(result.records)} scheduling decisions)")
 
 
 if __name__ == "__main__":

@@ -6,18 +6,15 @@ Two REAL jobs — LeNet-5 and CNN-B on synthetic prototype datasets,
 partitioned non-IID exactly as the paper's §5 (2 classes/device) — train in
 parallel on a shared 40-device pool under BODS. Wall-clock is simulated by
 the shifted-exponential device model; the learning is real JAX training.
+
+The whole scenario is the ``real-fl-two-job`` preset: one ``ExperimentSpec``
+with ``runtime="real_fl"`` replaces the old hand-wired
+DevicePool/CostModel/scheduler/runtime/engine chain.
 """
 
 import argparse
 
-import numpy as np
-
-from repro.config.base import JobConfig
-from repro.configs.paper_models import cnn_b, lenet5
-from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
-from repro.data.synthetic import make_classification_dataset
-from repro.fl.partition import noniid_partition
-from repro.fl.runtime import FLJobRuntime, MultiRuntime
+from repro.experiment import get_preset
 
 
 def main():
@@ -27,31 +24,12 @@ def main():
     ap.add_argument("--scheduler", default="bods")
     args = ap.parse_args()
 
-    jobs, runtimes = [], []
-    for jid, (mk, target) in enumerate(((lenet5, 0.90), (cnn_b, 0.80))):
-        cfg = mk()
-        x, y = make_classification_dataset(8000, cfg.input_shape,
-                                           cfg.num_classes, noise=1.2, seed=jid)
-        ex, ey = make_classification_dataset(800, cfg.input_shape,
-                                             cfg.num_classes, noise=1.2,
-                                             seed=100 + jid)
-        part = noniid_partition(y, args.devices, seed=jid)
-        job = JobConfig(job_id=jid, model=cfg, target_metric=target,
-                        max_rounds=args.rounds, local_epochs=3,
-                        batch_size=32, lr=0.02)
-        jobs.append(job)
-        runtimes.append(FLJobRuntime(job, x, y, part, ex, ey, seed=jid))
-
-    pool = DevicePool.heterogeneous(args.devices, len(jobs), seed=5)
-    cost = CostModel(pool, alpha=4.0, beta=0.25)
-    cost.calibrate([3.0] * len(jobs), n_sel=5)
-    engine = MultiJobEngine(jobs, pool, cost,
-                            get_scheduler(args.scheduler, cost_model=cost, seed=0),
-                            MultiRuntime(runtimes), n_sel=5)
-    engine.run(verbose=True)
+    spec = get_preset("real-fl-two-job", scheduler=args.scheduler,
+                      rounds=args.rounds, num_devices=args.devices)
+    result = spec.run(verbose=True)
 
     print("\nsummary:")
-    for name, v in engine.summary().items():
+    for name, v in result.summary.items():
         print(f"  {name}: rounds={v['rounds']} best_acc={v['best_accuracy']:.3f} "
               f"sim_time={v['makespan']/60:.1f} min")
 

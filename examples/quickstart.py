@@ -2,44 +2,28 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Runs the paper's core loop end to end in under a minute: a shared device
-pool, the time+fairness cost model, and BODS vs Random scheduling — printing
-the per-job time-to-target and the speedup.
+Runs the paper's core loop end to end in under a minute — and shows the
+repo's one front door for every scenario: a declarative ``ExperimentSpec``.
+A preset materializes the spec (jobs, pool, cost model, scheduler name,
+runtime kind), ``spec.run()`` wires and executes the engine, and the spec
+JSON-round-trips so any run is replayable:
+
+    spec = get_preset("quickstart", scheduler="bods")
+    result = spec.run()                    # -> ExperimentResult
+    spec.save("spec.json")                 # python -m repro.experiment.cli run spec.json
 """
 
-import numpy as np
-
-from repro.config.base import ArchFamily, JobConfig, ModelConfig
-from repro.core import CostModel, DevicePool, MultiJobEngine, get_scheduler
-from repro.fl.runtime import SyntheticRuntime
-
-
-def make_jobs(n=3, target=0.8):
-    mc = ModelConfig(name="clf", family=ArchFamily.CNN, cnn_spec=(("flatten",),),
-                     input_shape=(4, 4, 1), num_classes=10)
-    return [JobConfig(job_id=i, model=mc, target_metric=target, max_rounds=150)
-            for i in range(n)]
+from repro.experiment import get_preset
 
 
 def run(scheduler: str) -> float:
-    pool = DevicePool.heterogeneous(num_devices=100, num_jobs=3, seed=1)
-    cost = CostModel(pool, alpha=4.0, beta=0.25)
-    cost.calibrate([5.0] * 3, n_sel=10)
-    engine = MultiJobEngine(
-        jobs=make_jobs(),
-        pool=pool,
-        cost_model=cost,
-        scheduler=get_scheduler(scheduler, cost_model=cost, seed=0),
-        runtime=SyntheticRuntime(num_jobs=3, num_devices=100, seed=2),
-        n_sel=10,
-    )
-    engine.run()
-    makespan = max(v["makespan"] for v in engine.summary().values())
-    for name, v in engine.summary().items():
-        t2t = "-" if v["time_to_target"] is None else f"{v['time_to_target']/60:.0f} min"
+    result = get_preset("quickstart", scheduler=scheduler).run()
+    for name, v in result.summary.items():
+        t2t = ("-" if v["time_to_target"] is None
+               else f"{v['time_to_target']/60:.0f} min")
         print(f"  [{scheduler}] {name}: best_acc={v['best_accuracy']:.3f} "
               f"time_to_target={t2t}")
-    return makespan
+    return result.makespan
 
 
 if __name__ == "__main__":

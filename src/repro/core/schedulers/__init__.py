@@ -2,9 +2,12 @@
 
 Paper methods: BODS (Bayesian optimization), RLDS (reinforcement learning).
 Paper baselines: Random, FedCS, Greedy, Genetic (+ appendix: SimulatedAnnealing).
-"""
 
-from typing import Dict, Type
+Schedulers self-register into ``repro.experiment.registry.SCHEDULERS`` via
+``@register_scheduler("<name>")`` at class definition; importing this package
+loads every built-in. ``get_scheduler``/``list_schedulers`` remain the
+convenience front end over that registry.
+"""
 
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.core.schedulers.random_sched import RandomScheduler
@@ -15,32 +18,21 @@ from repro.core.schedulers.simulated_annealing import SimulatedAnnealingSchedule
 from repro.core.schedulers.bods import BODSScheduler
 from repro.core.schedulers.dnn import DNNScheduler
 from repro.core.schedulers.rlds import RLDSScheduler
-
-_SCHEDULERS: Dict[str, Type[SchedulerBase]] = {
-    "random": RandomScheduler,
-    "greedy": GreedyScheduler,
-    "fedcs": FedCSScheduler,
-    "genetic": GeneticScheduler,
-    "sa": SimulatedAnnealingScheduler,
-    "dnn": DNNScheduler,
-    "bods": BODSScheduler,
-    "rlds": RLDSScheduler,
-}
+from repro.experiment.registry import SCHEDULERS
 
 
 def get_scheduler(name: str, **kwargs) -> SchedulerBase:
-    if name not in _SCHEDULERS:
-        raise KeyError(f"unknown scheduler {name!r}; known: {sorted(_SCHEDULERS)}")
-    return _SCHEDULERS[name](**kwargs)
+    return SCHEDULERS.create(name, **kwargs)
 
 
 def list_schedulers():
-    return sorted(_SCHEDULERS)
+    return SCHEDULERS.names()
 
 
 __all__ = [
     "SchedulerBase",
     "SchedulingContext",
+    "SCHEDULERS",
     "get_scheduler",
     "list_schedulers",
     "RandomScheduler",

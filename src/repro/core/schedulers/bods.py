@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.plans import random_plans, repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 
 MAX_OBS = 256
 NUM_FEATURES = 6
@@ -89,6 +90,7 @@ def _ei_scores(F, resid, est_obs, valid, cand_feats, cand_est, noise):
     return (best - mu_c) * cdf + sigma * pdf
 
 
+@register_scheduler("bods")
 class BODSScheduler(SchedulerBase):
     name = "bods"
 

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.plans import random_plans
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 from repro.core.schedulers.bods import NUM_FEATURES
 
 BUF = 256
@@ -50,6 +51,7 @@ def _sgd_step(params, feats, targets, valid, lr):
     return jax.tree_util.tree_map(lambda p_, g_: p_ - lr * g_, params, g)
 
 
+@register_scheduler("dnn")
 class DNNScheduler(SchedulerBase):
     name = "dnn"
 

@@ -12,8 +12,10 @@ import numpy as np
 
 from repro.core.plans import plan_from_indices
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 
 
+@register_scheduler("fedcs")
 class FedCSScheduler(SchedulerBase):
     name = "fedcs"
 

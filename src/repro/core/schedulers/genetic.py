@@ -11,8 +11,10 @@ import numpy as np
 
 from repro.core.plans import random_plans, repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 
 
+@register_scheduler("genetic")
 class GeneticScheduler(SchedulerBase):
     name = "genetic"
 

@@ -6,8 +6,10 @@ import numpy as np
 
 from repro.core.plans import random_plans
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 
 
+@register_scheduler("random")
 class RandomScheduler(SchedulerBase):
     name = "random"
 

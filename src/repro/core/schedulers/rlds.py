@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.plans import repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 from repro.optim import adamw
 
 NUM_FEATURES = 6
@@ -96,6 +97,7 @@ def _probs(params, feats):
     return jax.nn.sigmoid(_policy_logits(params, feats))
 
 
+@register_scheduler("rlds")
 class RLDSScheduler(SchedulerBase):
     name = "rlds"
 

@@ -10,8 +10,10 @@ import numpy as np
 
 from repro.core.plans import random_plans
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.experiment.registry import register_scheduler
 
 
+@register_scheduler("sa")
 class SimulatedAnnealingScheduler(SchedulerBase):
     name = "sa"
 

@@ -1,0 +1,55 @@
+"""Declarative experiment API: one ``ExperimentSpec -> run()`` entrypoint.
+
+Every multi-job FL scenario in this repo — paper table reproductions,
+real-training testbeds, fault-injection studies, cluster-scale scheduling —
+is a single frozen, JSON-serializable ``ExperimentSpec``:
+
+    from repro.experiment import ExperimentSpec, JobSpec
+
+    spec = ExperimentSpec(jobs=(JobSpec(name="lenet5", target_metric=0.8),),
+                          scheduler="bods")
+    result = spec.run()          # -> ExperimentResult (summary + records)
+    spec2 = ExperimentSpec.from_dict(result.to_dict()["spec"])  # replayable
+
+Components resolve through decorator registries (``@register_scheduler``,
+``@register_runtime``), named presets live in ``repro.experiment.presets``,
+and ``python -m repro.experiment.cli run spec.json`` runs a spec from disk.
+
+Attribute access is lazy (PEP 562) so that ``repro.core.schedulers`` can
+import ``repro.experiment.registry`` at class-definition time without
+triggering the heavier spec/runtime imports (and without an import cycle).
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "Registry": "repro.experiment.registry",
+    "SCHEDULERS": "repro.experiment.registry",
+    "RUNTIMES": "repro.experiment.registry",
+    "register_scheduler": "repro.experiment.registry",
+    "register_runtime": "repro.experiment.registry",
+    "JobSpec": "repro.experiment.spec",
+    "PoolSpec": "repro.experiment.spec",
+    "CostSpec": "repro.experiment.spec",
+    "ExperimentSpec": "repro.experiment.spec",
+    "Experiment": "repro.experiment.spec",
+    "ExperimentResult": "repro.experiment.spec",
+    "get_preset": "repro.experiment.presets",
+    "list_presets": "repro.experiment.presets",
+    "register_preset": "repro.experiment.presets",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        module = importlib.import_module(_EXPORTS[name])
+        return getattr(module, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,6 @@
+"""``python -m repro.experiment`` — alias for ``python -m repro.experiment.cli``."""
+
+from repro.experiment.cli import main
+
+if __name__ == "__main__":
+    main()

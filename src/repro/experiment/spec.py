@@ -1,0 +1,292 @@
+"""``ExperimentSpec``: the one declarative front door to the MJ-FL system.
+
+A spec is a frozen, JSON-round-trippable description of a complete multi-job
+federated-learning experiment: the jobs, the device pool, the cost-model
+coefficients, the scheduler (by registry name), the runtime (``synthetic``
+closed-form convergence or ``real_fl`` actual JAX training), and the
+fault/straggler/queueing knobs of the engine. ``spec.build()`` wires the
+``DevicePool -> CostModel -> calibrate -> scheduler -> runtime ->
+MultiJobEngine`` chain that every example/benchmark/test used to assemble by
+hand; ``spec.run()`` executes it and returns an ``ExperimentResult`` whose
+``to_dict()`` embeds the spec, so any saved result is a replayable spec.
+
+All randomness is seeded from the spec (pool seed, scheduler seed, runtime
+seed, engine seed), so equal specs reproduce results bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config.base import ArchFamily, JobConfig, ModelConfig
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+from repro.core.multijob import MultiJobEngine, RoundRecord
+from repro.experiment.registry import RUNTIMES, SCHEDULERS
+
+STUB_MODEL = "stub"
+
+
+def _resolve_model(job: "JobSpec") -> ModelConfig:
+    """Resolve a JobSpec's model id to a ModelConfig named after the job.
+
+    ``stub`` is the scheduler-plane placeholder (a flatten-only classifier —
+    never trained by the synthetic runtime, but it gives the engine a valid
+    config and the summary a stable key). Any other id resolves through the
+    arch registry (``paper-lenet5``, ``qwen3-8b``, ...).
+    """
+    if job.model == STUB_MODEL:
+        return ModelConfig(name=job.name, family=ArchFamily.CNN,
+                           cnn_spec=(("flatten",),), input_shape=(4, 4, 1),
+                           num_classes=10)
+    from repro.config.registry import get_arch
+
+    cfg = get_arch(job.model)
+    return dataclasses.replace(cfg, name=job.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One FL job, declaratively: what to train, to which target, how fast
+    it converges under the synthetic runtime."""
+
+    name: str
+    model: str = STUB_MODEL         # arch-registry id, or "stub"
+    target_metric: float = 0.8
+    max_rounds: int = 150
+    local_epochs: int = 5
+    batch_size: int = 32
+    lr: float = 0.05
+    # Synthetic-runtime convergence rate b0 (Formula 13); None -> runtime
+    # default. Encodes job complexity ordering (LeNet > CNN > VGG).
+    convergence_rate: Optional[float] = None
+
+    def to_job_config(self, job_id: int) -> JobConfig:
+        return JobConfig(job_id=job_id, model=_resolve_model(self),
+                         target_metric=self.target_metric,
+                         max_rounds=self.max_rounds,
+                         local_epochs=self.local_epochs,
+                         batch_size=self.batch_size, lr=self.lr)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """The heterogeneous device pool (Formula 4 shifted-exponential model)."""
+
+    num_devices: int = 100
+    seed: int = 0
+    a_range: Tuple[float, float] = (2e-4, 2e-3)
+    mu_range: Tuple[float, float] = (1.0, 10.0)
+    data_range: Tuple[int, int] = (200, 600)
+    # Optional per-job multiplier on data sizes (cluster scheduling folds
+    # per-arch step cost into slice-seconds this way). Length must equal the
+    # number of jobs.
+    job_weights: Optional[Tuple[float, ...]] = None
+
+    def build(self, num_jobs: int) -> DevicePool:
+        pool = DevicePool.heterogeneous(
+            self.num_devices, num_jobs, seed=self.seed,
+            a_range=tuple(self.a_range), mu_range=tuple(self.mu_range),
+            data_range=tuple(self.data_range))
+        if self.job_weights is not None:
+            w = np.asarray(self.job_weights, dtype=np.float64)
+            if w.shape != (num_jobs,):
+                raise ValueError(
+                    f"job_weights has shape {w.shape}, expected ({num_jobs},)")
+            pool.data_sizes = pool.data_sizes * w[None, :]
+        return pool
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSpec:
+    """Formula 2 coefficients; ``calibrate`` normalizes the two terms from
+    the pool so alpha/beta are unitless (the repo-wide default)."""
+
+    alpha: float = 4.0
+    beta: float = 0.25
+    delta_fairness: bool = True
+    calibrate: bool = True
+
+    def build(self, pool: DevicePool, taus: List[float], n_sel: int) -> CostModel:
+        cm = CostModel(pool, alpha=self.alpha, beta=self.beta,
+                       delta_fairness=self.delta_fairness)
+        if self.calibrate:
+            cm.calibrate(taus, n_sel=n_sel)
+        return cm
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """A complete multi-job FL experiment. ``build()`` -> ``Experiment``,
+    ``run()`` -> ``ExperimentResult``; ``to_dict``/``from_dict`` round-trip
+    through JSON."""
+
+    jobs: Tuple[JobSpec, ...]
+    pool: PoolSpec = PoolSpec()
+    cost: CostSpec = CostSpec()
+    scheduler: str = "random"
+    scheduler_seed: int = 0
+    scheduler_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    runtime: str = "synthetic"
+    runtime_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    non_iid: bool = True            # data distribution (both runtime kinds)
+    n_sel: Optional[int] = None     # devices per round; None -> 10% of pool
+    # Engine knobs: faults, stragglers, queueing-aware release horizon.
+    failure_rate: float = 0.0
+    failure_cooldown: float = 60.0
+    over_provision: float = 1.0
+    release_horizon: float = 0.0
+    engine_seed: int = 12345
+    name: str = "experiment"
+
+    def __post_init__(self):
+        object.__setattr__(self, "jobs", tuple(self.jobs))
+        if not self.jobs:
+            raise ValueError("ExperimentSpec needs at least one job")
+
+    # ---- construction ----
+
+    def effective_n_sel(self) -> int:
+        return self.n_sel or max(1, int(round(0.1 * self.pool.num_devices)))
+
+    def build(self) -> "Experiment":
+        jobs = [js.to_job_config(i) for i, js in enumerate(self.jobs)]
+        pool = self.pool.build(len(jobs))
+        n_sel = self.effective_n_sel()
+        cost_model = self.cost.build(
+            pool, [float(j.local_epochs) for j in jobs], n_sel)
+        # scheduler_kwargs may override the default seed/cost_model wiring
+        scheduler = SCHEDULERS.create(self.scheduler, **{
+            "cost_model": cost_model, "seed": self.scheduler_seed,
+            **dict(self.scheduler_kwargs)})
+        runtime = RUNTIMES.get(self.runtime)(
+            self, jobs, pool, **dict(self.runtime_kwargs))
+        engine = MultiJobEngine(
+            jobs, pool, cost_model, scheduler, runtime,
+            n_sel=n_sel,
+            failure_rate=self.failure_rate,
+            failure_cooldown=self.failure_cooldown,
+            over_provision=self.over_provision,
+            release_horizon=self.release_horizon,
+            rng=np.random.default_rng(self.engine_seed))
+        return Experiment(spec=self, engine=engine)
+
+    def run(self, verbose: bool = False,
+            on_round: Optional[Callable[[RoundRecord], None]] = None
+            ) -> "ExperimentResult":
+        return self.build().run(verbose=verbose, on_round=on_round)
+
+    # ---- serialization ----
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        d["jobs"] = tuple(JobSpec(**j) for j in d["jobs"])
+        pool = dict(d.get("pool", {}))
+        for key in ("a_range", "mu_range", "data_range", "job_weights"):
+            if pool.get(key) is not None:
+                pool[key] = tuple(pool[key])
+        d["pool"] = PoolSpec(**pool)
+        d["cost"] = CostSpec(**d.get("cost", {}))
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    def replace(self, **changes) -> "ExperimentSpec":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A built (but not yet run) experiment: the spec plus the live engine.
+
+    The engine is exposed for instrumentation (``engine.counts``,
+    ``engine.records``, monitoring hooks) — scenario wiring itself should
+    stay in the spec."""
+
+    spec: ExperimentSpec
+    engine: MultiJobEngine
+
+    def run(self, verbose: bool = False,
+            on_round: Optional[Callable[[RoundRecord], None]] = None
+            ) -> "ExperimentResult":
+        t0 = time.time()
+        self.engine.run(verbose=verbose, on_round=on_round)
+        return ExperimentResult(
+            spec=self.spec, summary=self.engine.summary(),
+            records=list(self.engine.records), wall_s=time.time() - t0)
+
+
+def _record_to_dict(r: RoundRecord) -> dict:
+    d = dataclasses.asdict(r)
+    d["device_ids"] = np.asarray(r.device_ids).astype(int).tolist()
+    d["dropped"] = np.asarray(r.dropped).astype(int).tolist()
+    return d
+
+
+def _record_from_dict(d: dict) -> RoundRecord:
+    d = dict(d)
+    d["device_ids"] = np.asarray(d["device_ids"], dtype=int)
+    d["dropped"] = np.asarray(d["dropped"], dtype=int)
+    return RoundRecord(**d)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """What a run produced: per-job summary (paper Tables 1/2/5 quantities),
+    the full round trace, and the spec that generated it."""
+
+    spec: ExperimentSpec
+    summary: Dict[str, dict]
+    records: List[RoundRecord]
+    wall_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dict(spec=self.spec.to_dict(), summary=self.summary,
+                    records=[_record_to_dict(r) for r in self.records],
+                    wall_s=self.wall_s)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentResult":
+        return cls(spec=ExperimentSpec.from_dict(d["spec"]),
+                   summary=d["summary"],
+                   records=[_record_from_dict(r) for r in d["records"]],
+                   wall_s=d.get("wall_s", 0.0))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentResult":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    @property
+    def makespan(self) -> float:
+        return max(v["makespan"] for v in self.summary.values())

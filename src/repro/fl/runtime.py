@@ -97,18 +97,25 @@ class MultiRuntime:
         return self.runtimes[job_id].run_round(job_id, device_ids, round_idx)
 
 
+DEFAULT_B0 = 0.15  # Formula 13 convergence rate when a job doesn't set one
+
+
 class SyntheticRuntime:
     """Closed-form convergence: ceiling from class coverage, rate from Formula 13.
 
-    acc_m(r) = ceiling_m * (1 - 1/(b0 * r_eff + 1))  with r_eff the round count
-    and ceiling_m = base + (1 - base) * coverage^p. coverage = fraction of the
-    job's label classes seen in scheduled devices so far. Under IID
+    acc_m(r) = ceiling_m * (1 - 1/(b0_m * r_eff + 1))  with r_eff the round
+    count and ceiling_m = base + (1 - base) * coverage^p. coverage = fraction
+    of the job's label classes seen in scheduled devices so far. Under IID
     (classes_per_device == num_classes) the ceiling is ~1 regardless, matching
     the paper's observation that fairness matters most under non-IID.
+
+    ``b0`` is a scalar shared by all jobs or a (num_jobs,) array of per-job
+    rates, so job complexity ordering (LeNet > CNN > VGG) converges at
+    genuinely different speeds; ``None`` entries fall back to ``DEFAULT_B0``.
     """
 
     def __init__(self, num_jobs: int, num_devices: int, num_classes: int = 10,
-                 classes_per_device: int = 2, b0: float = 0.15,
+                 classes_per_device: int = 2, b0=DEFAULT_B0,
                  base: float = 0.35, power: float = 1.5, seed: int = 0,
                  noise: float = 0.004):
         rng = np.random.default_rng(seed)
@@ -118,6 +125,10 @@ class SyntheticRuntime:
             for _ in range(num_devices)])
         self.seen = [np.zeros(num_classes, dtype=np.float64) for _ in range(num_jobs)]
         self.rounds = np.zeros(num_jobs, dtype=np.int64)
+        if np.ndim(b0) > 0:
+            b0 = np.array([DEFAULT_B0 if v is None else float(v) for v in b0])
+            if b0.shape != (num_jobs,):
+                raise ValueError(f"b0 has shape {b0.shape}, expected ({num_jobs},)")
         self.b0, self.base, self.power = b0, base, power
         self.noise = noise
         self.rng = rng
@@ -134,7 +145,9 @@ class SyntheticRuntime:
         cov = 1.0 - tv
         ceiling = self.base + (1 - self.base) * cov ** self.power
         r = float(self.rounds[job_id])
-        acc = ceiling * (1 - 1 / (self.b0 * r + 1.0))
+        b = np.asarray(self.b0, dtype=np.float64)
+        b0 = float(b[job_id] if b.ndim else b)
+        acc = ceiling * (1 - 1 / (b0 * r + 1.0))
         acc = float(np.clip(acc + self.rng.normal(0, self.noise), 0, 1))
         loss = float(-np.log(max(acc, 1e-3)))
         return {"loss": loss, "accuracy": acc}

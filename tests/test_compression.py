@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.compression import ErrorFeedbackState, topk_compress, topk_decompress

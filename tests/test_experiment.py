@@ -1,0 +1,202 @@
+"""Experiment-API tests: spec JSON round-trip, registry semantics, and
+bit-for-bit equivalence between ``spec.run()`` and hand-wired
+``MultiJobEngine`` construction with equal seeds."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.config.base import ArchFamily, JobConfig, ModelConfig
+from repro.core.cost import CostModel
+from repro.core.devices import DevicePool
+from repro.core.multijob import MultiJobEngine
+from repro.core.schedulers import get_scheduler
+from repro.experiment import (ExperimentResult, ExperimentSpec, JobSpec,
+                              PoolSpec, Registry, get_preset, list_presets)
+from repro.experiment.registry import RUNTIMES, SCHEDULERS
+from repro.fl.runtime import SyntheticRuntime
+
+
+def tiny_spec(scheduler="random", **overrides):
+    spec = ExperimentSpec(
+        jobs=tuple(JobSpec(name=f"j{i}", target_metric=0.75, max_rounds=25)
+                   for i in range(2)),
+        pool=PoolSpec(num_devices=30, seed=3),
+        scheduler=scheduler, runtime="synthetic",
+        runtime_kwargs={"seed": 2}, n_sel=4)
+    return spec.replace(**overrides) if overrides else spec
+
+
+# ---- serialization ----
+
+def test_spec_json_round_trip():
+    spec = tiny_spec("bods", failure_rate=0.1, release_horizon=0.5,
+                     scheduler_kwargs={"seed": 7},
+                     pool=PoolSpec(num_devices=30, seed=3,
+                                   job_weights=(1.0, 2.0)))
+    restored = ExperimentSpec.from_json(spec.to_json())
+    assert restored == spec
+    # a second hop through plain json stays stable
+    assert ExperimentSpec.from_dict(json.loads(restored.to_json())) == spec
+    # scheduler_kwargs seed overrides (not collides with) scheduler_seed
+    restored.build()
+
+
+def test_runtime_kwargs_b0_beats_convergence_rate():
+    spec = tiny_spec().replace(
+        jobs=(JobSpec(name="j", max_rounds=10, convergence_rate=0.1),),
+        runtime_kwargs={"b0": 0.3, "seed": 2})
+    assert float(spec.build().engine.runtime.b0) == 0.3
+
+
+def test_spec_rejects_empty_jobs():
+    with pytest.raises(ValueError):
+        ExperimentSpec(jobs=())
+
+
+def test_result_round_trip_and_replay(tmp_path):
+    spec = tiny_spec()
+    result = spec.run()
+    path = tmp_path / "result.json"
+    result.save(str(path))
+    loaded = ExperimentResult.load(str(path))
+    assert loaded.spec == spec
+    assert loaded.summary == result.summary
+    assert len(loaded.records) == len(result.records)
+    np.testing.assert_array_equal(loaded.records[0].device_ids,
+                                  result.records[0].device_ids)
+    # the embedded spec re-runs to identical summary (replayability)
+    assert loaded.spec.run().summary == result.summary
+
+
+# ---- registry ----
+
+def test_registry_rejects_duplicate_and_unknown():
+    reg = Registry("thing")
+
+    @reg.register("a")
+    def make_a():
+        return "a"
+
+    with pytest.raises(ValueError):
+        @reg.register("a")
+        def make_a2():
+            return "a2"
+
+    with pytest.raises(KeyError):
+        reg.get("nope")
+    assert reg.create("a") == "a"
+    assert "a" in reg and reg.names() == ["a"]
+
+
+def test_builtin_registries_populated():
+    for name in ("random", "greedy", "fedcs", "genetic", "sa", "dnn",
+                 "bods", "rlds"):
+        assert name in SCHEDULERS
+    assert "synthetic" in RUNTIMES and "real_fl" in RUNTIMES
+    with pytest.raises(KeyError):
+        SCHEDULERS.get("not-a-scheduler")
+    with pytest.raises(KeyError):
+        tiny_spec().replace(runtime="not-a-runtime").build()
+
+
+# ---- engine equivalence ----
+
+def test_spec_run_matches_hand_wired_engine_bit_for_bit():
+    spec = tiny_spec("bods")
+    result = spec.run()
+
+    mc = ModelConfig(name="x", family=ArchFamily.CNN, cnn_spec=(("flatten",),),
+                     input_shape=(4, 4, 1), num_classes=10)
+    jobs = [JobConfig(job_id=i, model=mc, target_metric=0.75, max_rounds=25)
+            for i in range(2)]
+    pool = DevicePool.heterogeneous(30, 2, seed=3)
+    cm = CostModel(pool, alpha=4.0, beta=0.25)
+    cm.calibrate([5.0, 5.0], n_sel=4)
+    eng = MultiJobEngine(jobs, pool, cm,
+                         get_scheduler("bods", cost_model=cm, seed=0),
+                         SyntheticRuntime(num_jobs=2, num_devices=30, seed=2),
+                         n_sel=4, rng=np.random.default_rng(12345))
+    eng.run()
+
+    assert len(result.records) == len(eng.records)
+    for a, b in zip(result.records, eng.records):
+        assert a.round_time == b.round_time
+        assert a.cost == b.cost
+        assert a.accuracy == b.accuracy
+        np.testing.assert_array_equal(a.device_ids, b.device_ids)
+    # summary keys differ only by job name; values must match exactly
+    assert list(result.summary.values()) == list(eng.summary().values())
+
+
+def test_equal_specs_reproduce_exactly():
+    r1 = tiny_spec("genetic").run()
+    r2 = ExperimentSpec.from_json(tiny_spec("genetic").to_json()).run()
+    assert r1.summary == r2.summary
+
+
+# ---- per-job convergence rates ----
+
+def test_per_job_convergence_rate_reaches_runtime():
+    spec = tiny_spec().replace(jobs=(
+        JobSpec(name="slow", target_metric=0.75, max_rounds=25,
+                convergence_rate=0.05),
+        JobSpec(name="fast", target_metric=0.75, max_rounds=25,
+                convergence_rate=0.4)))
+    exp = spec.build()
+    np.testing.assert_allclose(exp.engine.runtime.b0, [0.05, 0.4])
+    s = exp.run().summary
+    # the fast job must out-converge the slow one over equal round budgets
+    assert s["fast"]["best_accuracy"] > s["slow"]["best_accuracy"]
+
+
+def test_synthetic_runtime_scalar_b0_still_works():
+    rt = SyntheticRuntime(num_jobs=2, num_devices=10, b0=0.15, seed=0)
+    m = rt.run_round(0, np.arange(5), 0)
+    assert 0.0 <= m["accuracy"] <= 1.0
+
+
+# ---- presets & CLI ----
+
+def test_presets_exist_and_build():
+    names = list_presets()
+    for expected in ("paper-group-a", "paper-group-b", "quickstart",
+                     "real-fl-two-job", "fault-injection"):
+        assert expected in names
+    spec = get_preset("paper-group-a", scheduler="random", max_rounds=10)
+    assert [j.name for j in spec.jobs] == ["vgg16", "cnn-a", "lenet5"]
+    assert spec.jobs[0].convergence_rate is not None
+    fault = get_preset("fault-injection", scheduler="random")
+    assert fault.failure_rate > 0
+    # fault preset really drops devices
+    res = fault.replace(jobs=tuple(j for j in tiny_spec().jobs)).run()
+    assert sum(len(r.dropped) for r in res.records) > 0
+
+
+def test_cli_run_and_list(tmp_path, capsys):
+    from repro.experiment import cli
+
+    spec_path = tmp_path / "spec.json"
+    out_path = tmp_path / "result.json"
+    tiny_spec().save(str(spec_path))
+    cli.main(["run", str(spec_path), "--out", str(out_path)])
+    loaded = ExperimentResult.load(str(out_path))
+    assert loaded.summary == tiny_spec().run().summary
+
+    cli.main(["list"])
+    out = capsys.readouterr().out
+    assert "bods" in out and "real_fl" in out and "quickstart" in out
+
+
+def test_cli_preset_with_overrides(tmp_path, capsys):
+    from repro.experiment import cli
+
+    spec_path = tmp_path / "spec.json"
+    cli.main(["preset", "quickstart", "--arg", "scheduler=random",
+              "--arg", "max_rounds=5", "--set", "n_sel=4",
+              "--out", str(spec_path)])
+    spec = ExperimentSpec.load(str(spec_path))
+    assert spec.scheduler == "random"
+    assert spec.jobs[0].max_rounds == 5
+    assert spec.n_sel == 4

@@ -1,6 +1,9 @@
 """Data-partitioner tests (the paper's §5 IID / non-IID setups)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.data.synthetic import make_classification_dataset

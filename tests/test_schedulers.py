@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests; suite must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import CostModel

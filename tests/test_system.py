@@ -1,56 +1,40 @@
 """End-to-end behaviour tests of the MJ-FL system (the paper's claims in
 miniature): parallel multi-job execution with real federated training, and
-the scheduler-quality ordering on the synthetic convergence model."""
+the scheduler-quality ordering on the synthetic convergence model. All
+scenarios are declared through the ``ExperimentSpec`` front door — the same
+path the examples, benchmarks, and CLI use."""
 
 import numpy as np
 import pytest
 
-from repro.config.base import JobConfig
-from repro.configs.paper_models import cnn_b, lenet5
-from repro.core.cost import CostModel
-from repro.core.devices import DevicePool
-from repro.core.multijob import MultiJobEngine
-from repro.core.schedulers import get_scheduler
-from repro.data.synthetic import make_classification_dataset
-from repro.fl.partition import noniid_partition
-from repro.fl.runtime import FLJobRuntime, MultiRuntime, SyntheticRuntime
-from repro.config.base import ArchFamily, ModelConfig
+from repro.experiment import ExperimentSpec, JobSpec, PoolSpec
 
 
-def _synthetic_engine(sched_name, seed=1, target=0.8, max_rounds=120):
-    jobs = [JobConfig(job_id=i,
-                      model=ModelConfig(name=f"j{i}", family=ArchFamily.CNN,
-                                        cnn_spec=(("flatten",),),
-                                        input_shape=(4, 4, 1), num_classes=10),
-                      target_metric=target, max_rounds=max_rounds)
-            for i in range(3)]
-    pool = DevicePool.heterogeneous(100, 3, seed=seed)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
-    cm.calibrate([5.0] * 3, n_sel=10)
-    sched = get_scheduler(sched_name, cost_model=cm, seed=0,
-                          **({"pretrain_rounds": 100} if sched_name == "rlds" else {}))
-    rt = SyntheticRuntime(num_jobs=3, num_devices=100, seed=2)
-    eng = MultiJobEngine(jobs, pool, cm, sched, rt, n_sel=10)
-    eng.run()
-    return eng
+def _synthetic_spec(sched_name, seed=1, target=0.8, max_rounds=120):
+    return ExperimentSpec(
+        jobs=tuple(JobSpec(name=f"j{i}", target_metric=target,
+                           max_rounds=max_rounds) for i in range(3)),
+        pool=PoolSpec(num_devices=100, seed=seed),
+        scheduler=sched_name,
+        scheduler_kwargs=({"pretrain_rounds": 100} if sched_name == "rlds"
+                          else {}),
+        runtime="synthetic", runtime_kwargs={"seed": 2}, n_sel=10)
 
 
 def test_proposed_methods_beat_random_on_makespan():
     """Paper's headline: BODS/RLDS reach targets faster than Random."""
-    results = {}
-    for name in ("random", "bods"):
-        eng = _synthetic_engine(name)
-        results[name] = max(v["makespan"] for v in eng.summary().values())
+    results = {name: _synthetic_spec(name).run().makespan
+               for name in ("random", "bods")}
     assert results["bods"] < 0.8 * results["random"]
 
 
 def test_greedy_caps_below_target_under_noniid():
     """Paper: Greedy starves slow devices' data -> accuracy ceiling."""
-    eng = _synthetic_engine("greedy")
-    best = [v["best_accuracy"] for v in eng.summary().values()]
+    best = [v["best_accuracy"]
+            for v in _synthetic_spec("greedy").run().summary.values()]
     assert max(best) < 0.8  # never reaches the 0.8 target
-    eng2 = _synthetic_engine("bods")
-    best2 = [v["best_accuracy"] for v in eng2.summary().values()]
+    best2 = [v["best_accuracy"]
+             for v in _synthetic_spec("bods").run().summary.values()]
     assert min(best2) >= 0.8
 
 
@@ -58,33 +42,24 @@ def test_greedy_caps_below_target_under_noniid():
 def test_real_multijob_fl_end_to_end():
     """Two REAL FL jobs (LeNet5 + CNN-B on synthetic non-IID shards) trained
     in parallel under BODS: accuracy must rise and devices must be shared."""
-    num_devices = 40
-    jobs, runtimes = [], []
-    for jid, mk in enumerate((lenet5, cnn_b)):
-        cfg = mk()
-        x, y = make_classification_dataset(6000, cfg.input_shape,
-                                           cfg.num_classes, noise=1.2, seed=jid)
-        ex, ey = make_classification_dataset(600, cfg.input_shape,
-                                             cfg.num_classes, noise=1.2,
-                                             seed=100 + jid)
-        part = noniid_partition(y, num_devices, seed=jid)
-        job = JobConfig(job_id=jid, model=cfg, target_metric=0.95,
-                        max_rounds=15, local_epochs=2, batch_size=32, lr=0.02)
-        jobs.append(job)
-        runtimes.append(FLJobRuntime(job, x, y, part, ex, ey, seed=jid))
-
-    pool = DevicePool.heterogeneous(num_devices, 2, seed=5)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
-    cm.calibrate([2.0, 2.0], n_sel=5)
-    sched = get_scheduler("bods", cost_model=cm, seed=0)
-    eng = MultiJobEngine(jobs, pool, cm, sched, MultiRuntime(runtimes), n_sel=5)
-    eng.run()
-    s = eng.summary()
-    assert len(eng.records) >= 20
-    for m, (name, v) in enumerate(s.items()):
-        accs = [r.accuracy for r in eng.records if r.job == m]
+    spec = ExperimentSpec(
+        jobs=(JobSpec(name="paper-lenet5", model="paper-lenet5",
+                      target_metric=0.95, max_rounds=15, local_epochs=2,
+                      batch_size=32, lr=0.02),
+              JobSpec(name="paper-cnn-b", model="paper-cnn-b",
+                      target_metric=0.95, max_rounds=15, local_epochs=2,
+                      batch_size=32, lr=0.02)),
+        pool=PoolSpec(num_devices=40, seed=5),
+        scheduler="bods", runtime="real_fl",
+        runtime_kwargs={"samples_per_job": 6000, "eval_samples": 600},
+        non_iid=True, n_sel=5)
+    exp = spec.build()
+    res = exp.run()
+    assert len(res.records) >= 20
+    for m, (name, v) in enumerate(res.summary.items()):
+        accs = [r.accuracy for r in res.records if r.job == m]
         # well above the 10-class chance level AND improving over the run
         assert v["best_accuracy"] > 0.2, (name, v)
         assert np.mean(accs[-3:]) > np.mean(accs[:3]), (name, accs)
     # both jobs really ran in parallel on the shared pool
-    assert (eng.counts.sum(axis=1) > 0).all()
+    assert (exp.engine.counts.sum(axis=1) > 0).all()
