@@ -1,0 +1,170 @@
+"""Fleet-scale scoring benchmark: plans-scored/sec and round latency.
+
+Sweeps the plan-scoring core over K (pool size) x P (candidate count) and
+each backend, then drives a real ``fleet-scale`` experiment end-to-end per K
+to measure round latency. Writes ``BENCH_fleet.json`` so the perf
+trajectory of the scoring core is tracked per-PR (CI runs ``--smoke``).
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI-sized
+  PYTHONPATH=src python -m benchmarks.bench_fleet --out BENCH_fleet.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import scoring
+from repro.core.plans import indices_to_plans, random_plan_indices
+
+FULL_KS = [100, 1_000, 10_000, 100_000]
+FULL_PS = [256, 4096]
+SMOKE_KS = [100, 1_000]
+SMOKE_PS = [64, 256]
+
+KW = dict(alpha=4.0, beta=0.25, time_scale=3.0, fairness_scale=0.09,
+          delta_fairness=True)
+
+
+def _mem_budget_bytes() -> int:
+    """~40% of physical RAM: the ceiling for dense-numpy scoring temporaries
+    (the (P, K) float64 path peaks at ~32 bytes/element). Cells above the
+    budget are skipped with a marker row instead of OOM-killing the sweep."""
+    try:
+        total = os.sysconf("SC_PHYS_PAGES") * os.sysconf("SC_PAGE_SIZE")
+        return int(total * 0.4)
+    except (ValueError, OSError, AttributeError):  # pragma: no cover
+        return 6 << 30
+
+
+def _time_call(fn, min_s: float = 0.3, max_reps: int = 50) -> tuple:
+    fn()  # warm-up (jit compile + transfer paths)
+    reps, t0 = 0, time.perf_counter()
+    while True:
+        fn()
+        reps += 1
+        elapsed = time.perf_counter() - t0
+        if elapsed >= min_s or reps >= max_reps:
+            break
+    return elapsed / reps, reps
+
+
+def bench_scoring(Ks, Ps, backends) -> list:
+    """plans-scored/sec per (K, P, backend, plan form).
+
+    ``dense`` scores (P, K) bool plans (what the per-scheduler numpy loops
+    historically consumed); ``index`` scores the (P, n_sel) device-id form
+    the vectorized candidate generators produce natively — the fleet fast
+    path. ``speedup_vs_numpy`` is always relative to dense-numpy (the
+    pre-refactor scoring path) at the same K, P.
+    """
+    rng = np.random.default_rng(0)
+    budget = _mem_budget_bytes()
+    rows = []
+    for K in Ks:
+        times = rng.uniform(1.0, 100.0, K)
+        counts = rng.integers(0, 50, K).astype(np.float64)
+        available = rng.random(K) < 0.9
+        n_sel = max(1, K // 100)
+        for P in Ps:
+            idx = random_plan_indices(rng, available, n_sel, P)
+            plans = indices_to_plans(idx, K)
+            variants = [(b, "dense") for b in backends]
+            variants += [("numpy", "index"), ("jax", "index")]
+            base = None
+            for backend, form in variants:
+                if (backend == "numpy" and form == "dense"
+                        and P * K * 32 > budget):
+                    print(f"  K={K:>6} P={P:>5} {backend:>6}/{form:<5}: "
+                          f"skipped (dense f64 temporaries exceed ~40% RAM)")
+                    rows.append({"backend": backend, "form": form, "K": K,
+                                 "P": P, "n_sel": n_sel, "skipped": True})
+                    continue
+                if form == "dense":
+                    fn = lambda: scoring.score_plans(
+                        times, counts, plans, backend=backend, **KW)
+                else:
+                    fn = lambda: scoring.score_plan_indices(
+                        times, counts, idx, backend=backend, **KW)
+                per_call, reps = _time_call(fn)
+                r = {"backend": backend, "form": form, "K": K, "P": P,
+                     "n_sel": n_sel, "reps": reps, "sec_per_call": per_call,
+                     "plans_per_sec": P / per_call}
+                if backend == "numpy" and form == "dense":
+                    base = r["plans_per_sec"]
+                r["speedup_vs_numpy"] = (r["plans_per_sec"] / base
+                                         if base else None)
+                rows.append(r)
+                print(f"  K={K:>6} P={P:>5} {backend:>6}/{form:<5}: "
+                      f"{r['plans_per_sec']:>12.0f} plans/s "
+                      f"({r['sec_per_call'] * 1e3:.2f} ms/call, "
+                      f"x{r['speedup_vs_numpy']:.1f} vs numpy)")
+    return rows
+
+
+def bench_rounds(Ks, scheduler: str, backend: str, max_rounds: int) -> list:
+    """End-to-end round latency through the experiment layer (fleet axis)."""
+    from repro.experiment.presets import get_preset
+
+    rows = []
+    for K in Ks:
+        spec = get_preset("fleet-scale", scheduler=scheduler, num_devices=K,
+                          scoring_backend=backend, max_rounds=max_rounds)
+        t0 = time.perf_counter()
+        result = spec.run()
+        wall = time.perf_counter() - t0
+        n_rounds = len(result.records)
+        sim_mean = float(np.mean(
+            [v["mean_round_time"] for v in result.summary.values()]))
+        rows.append({
+            "K": K, "scheduler": scheduler, "backend": backend,
+            "rounds": n_rounds, "wall_s": wall,
+            "wall_s_per_round": wall / max(n_rounds, 1),
+            "sim_mean_round_time_s": sim_mean,
+        })
+        print(f"  K={K:>6} {scheduler}/{backend}: {n_rounds} rounds in "
+              f"{wall:.2f}s wall ({wall / max(n_rounds, 1) * 1e3:.0f} "
+              f"ms/round), sim mean T={sim_mean:.1f}s")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (small K, fewer reps)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--scheduler", default="bods",
+                    help="scheduler for the end-to-end round-latency sweep")
+    args = ap.parse_args(argv)
+
+    Ks = SMOKE_KS if args.smoke else FULL_KS
+    Ps = SMOKE_PS if args.smoke else FULL_PS
+    backends = ["numpy", "jax", "pallas"]
+
+    print(f"== scoring core: plans-scored/sec (backends={backends}) ==")
+    scoring_rows = bench_scoring(Ks, Ps, backends)
+
+    round_Ks = [k for k in Ks if k <= 10_000]
+    print("== end-to-end round latency (fleet-scale preset) ==")
+    round_rows = bench_rounds(round_Ks, args.scheduler, "jax",
+                              max_rounds=2 if args.smoke else 3)
+
+    out = {
+        "smoke": args.smoke,
+        "jax_backend": scoring._jax_backend_name(),
+        "Ks": Ks, "Ps": Ps,
+        "scoring": scoring_rows,
+        "rounds": round_rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,9 @@
 Emits human tables + machine CSV lines (prefix "CSV,").
 Table map: groups -> paper Tables 1-2 (+Figs 3,5,6,7 trajectories as CSV),
 mj_vs_sj -> Table 5, ablation -> appendix fairness ablation,
-roofline -> EXPERIMENTS.md §Roofline source data.
+roofline -> EXPERIMENTS.md §Roofline source data,
+fleet -> BENCH_fleet.json (plan-scoring core perf, smoke-sized here;
+run benchmarks.bench_fleet directly for the full K=1e5 sweep).
 
 Every engine-backed section is spec-driven: each cell is a declarative
 ``repro.experiment.ExperimentSpec`` (see ``benchmarks/common.py``), so any
@@ -24,7 +26,7 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="groups,mj_vs_sj,ablation,roofline")
+    ap.add_argument("--only", default="groups,mj_vs_sj,ablation,roofline,fleet")
     args = ap.parse_args()
     picks = set(args.only.split(","))
     t0 = time.time()
@@ -41,6 +43,9 @@ def main() -> None:
     if "roofline" in picks:
         from benchmarks import bench_roofline
         bench_roofline.main()
+    if "fleet" in picks:
+        from benchmarks import bench_fleet
+        bench_fleet.main(["--smoke"])
 
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
 

@@ -7,14 +7,21 @@ i.e. t_m^k = tau_m * a_k * D_k^m  +  Exp(scale = tau_m * D_k^m / mu_k)
 - ``mu_k`` — fluctuation rate (larger mu -> less jitter)
 - ``D_k^m`` — local dataset size of job m on device k
 - ``tau_m`` — local epochs of job m
+- Expected time:  E[t_m^k] = tau_m * D_k^m * (a_k + 1/mu_k).
 
-Expected time:  E[t_m^k] = tau_m * D_k^m * (a_k + 1/mu_k).
+Fleet-scale fast path: the per-job time-model coefficients are materialized
+ONCE as a structure-of-arrays (``_base``/``_shift``/``_scale``, (M, K), plus
+float32 mirrors for the scoring core) so a 100k-device pool constructs and
+schedules without per-round Python loops or repeated elementwise rebuilds —
+``expected_times`` is a cached lookup, ``sample_times_into`` draws a round
+into a caller-owned buffer with zero fresh allocation, and the ``*_all``
+variants produce all M jobs fused in one vectorized call.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -34,6 +41,7 @@ class DevicePool:
     def __post_init__(self):
         if self.busy_until is None:
             self.busy_until = np.zeros(self.num_devices, dtype=np.float64)
+        self._soa_src = None  # SoA caches build lazily (data_sizes may be rescaled)
 
     # ---- constructors ----
 
@@ -62,20 +70,81 @@ class DevicePool:
     def num_jobs(self) -> int:
         return int(self.data_sizes.shape[1])
 
+    # ---- structure-of-arrays fast path ----
+
+    def invalidate(self) -> None:
+        """Drop the SoA caches. Needed only after IN-PLACE mutation of
+        ``a``/``mu``/``data_sizes`` (replacing ``data_sizes`` wholesale is
+        detected automatically)."""
+        self._soa_src = None
+
+    def _ensure_soa(self) -> None:
+        """(Re)build the per-job coefficient arrays; invalidates automatically
+        when ``data_sizes`` is replaced (e.g. PoolSpec job_weights rescaling)."""
+        if self._soa_src is self.data_sizes:
+            return
+        d = self.data_sizes.T                         # (M, K)
+        self._base = np.ascontiguousarray(d * (self.a + 1.0 / self.mu))  # E[t]/tau
+        self._shift = np.ascontiguousarray(d * self.a)                   # floor/tau
+        self._scale = np.ascontiguousarray(d / self.mu)                  # Exp scale/tau
+        self._base32 = self._base.astype(np.float32)  # scoring-core mirror
+        self._exp_cache = {}                          # (job, tau) -> (K,) E[t]
+        self._shift_cache = {}                        # (job, tau) -> (K,) tau*shift
+        self._ebuf = np.empty(self.num_devices, dtype=np.float64)
+        self._soa_src = self.data_sizes
+
     # ---- time model (Formula 4) ----
 
     def expected_times(self, job: int, tau: float) -> np.ndarray:
-        """(K,) expected round time per device for job ``job``."""
-        d = self.data_sizes[:, job]
-        return tau * d * (self.a + 1.0 / self.mu)
+        """(K,) expected round time per device for job ``job`` (cached —
+        treat as read-only)."""
+        self._ensure_soa()
+        key = (int(job), float(tau))
+        out = self._exp_cache.get(key)
+        if out is None:
+            out = tau * self._base[job]
+            self._exp_cache[key] = out
+        return out
+
+    def expected_times32(self, job: int, tau: float) -> np.ndarray:
+        """float32 expected times for the jitted scoring backends."""
+        self._ensure_soa()
+        return np.float32(tau) * self._base32[job]
+
+    def expected_times_all(self, taus: Sequence[float]) -> np.ndarray:
+        """(M, K) expected times for every job fused in one call."""
+        self._ensure_soa()
+        return np.asarray(taus, dtype=np.float64)[:, None] * self._base
 
     def sample_times(self, job: int, tau: float, size: Optional[int] = None) -> np.ndarray:
         """Sample realized times for all K devices (one round)."""
-        d = self.data_sizes[:, job]
-        shift = tau * self.a * d
-        scale = tau * d / self.mu
-        shape = (self.num_devices,) if size is None else (size, self.num_devices)
-        return shift + self.rng.exponential(1.0, size=shape) * scale
+        self._ensure_soa()
+        if size is not None:
+            e = self.rng.exponential(1.0, size=(size, self.num_devices))
+            return tau * self._shift[job] + e * (tau * self._scale[job])
+        out = np.empty(self.num_devices, dtype=np.float64)
+        return self.sample_times_into(job, tau, out)
+
+    def sample_times_into(self, job: int, tau: float, out: np.ndarray) -> np.ndarray:
+        """Allocation-free round sampling into a caller-owned (K,) buffer."""
+        self._ensure_soa()
+        key = (int(job), float(tau))
+        shift = self._shift_cache.get(key)
+        if shift is None:
+            shift = tau * self._shift[job]
+            self._shift_cache[key] = shift
+        self.rng.standard_exponential(out=self._ebuf)
+        np.multiply(self._ebuf, self._scale[job], out=out)
+        out *= tau
+        out += shift
+        return out
+
+    def sample_times_all(self, taus: Sequence[float]) -> np.ndarray:
+        """(M, K) one realized round for every job, one fused RNG draw."""
+        self._ensure_soa()
+        t = np.asarray(taus, dtype=np.float64)[:, None]
+        e = self.rng.standard_exponential((self.num_jobs, self.num_devices))
+        return t * self._shift + e * (t * self._scale)
 
     # ---- occupancy ----
 

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from typing import Callable, Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
@@ -63,6 +64,10 @@ class RoundRecord:
     accuracy: float
     device_ids: np.ndarray
     dropped: np.ndarray
+    # Scheduler's estimated Formula-2 cost of the plan at schedule time (None
+    # for schedulers that don't estimate); cost - est_cost is the realized
+    # residual the learned schedulers (BODS GP, DNN) model.
+    est_cost: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -104,6 +109,18 @@ class MultiJobEngine:
         self.failure_rate = failure_rate
         self.failure_cooldown = failure_cooldown
         self.over_provision = over_provision
+        # Validate up front: an over-provisioned selection larger than the
+        # pool can NEVER be satisfied — the engine would re-enqueue "retry"
+        # events forever. Clamp (with a warning) instead of livelocking.
+        K = pool.num_devices
+        requested = int(round(self.n_sel * self.over_provision))
+        if requested > K:
+            self.n_sel = min(self.n_sel, K)
+            self.over_provision = K / self.n_sel
+            warnings.warn(
+                f"n_sel*over_provision = {requested} exceeds the pool size "
+                f"{K}; clamped to n_sel={self.n_sel}, "
+                f"over_provision={self.over_provision:.3f}", RuntimeWarning)
         self.release_horizon = release_horizon
         self.rng = rng or np.random.default_rng(12345)
         self.counts = np.zeros((len(jobs), pool.num_devices))  # S_m (Formula 16)
@@ -111,6 +128,13 @@ class MultiJobEngine:
         self._heap: list = []
         self._seq = 0
         self._in_flight: Dict[int, dict] = {}
+        self._clamp_warned: set = set()
+        # Preallocated per-round scratch (fleet pools: no 100k-sized fresh
+        # allocations inside the hot scheduling loop).
+        self._times_buf = np.empty(K, dtype=np.float64)
+        self._wait_buf = np.empty(K, dtype=np.float64)
+        self._busy_buf = np.empty(K, dtype=np.float64)
+        self._mask_buf = np.empty(K, dtype=bool)
 
     # ---- context assembly (Formula 8: other jobs' in-flight costs are context) ----
 
@@ -145,15 +169,42 @@ class MultiJobEngine:
         ctx = self._make_ctx(job, now)
         avail = int(ctx.available.sum())
         if avail < ctx.n_sel:
-            # Not enough free devices: wait for the next release event.
-            nxt = np.partition(self.pool.busy_until[self.pool.busy_until > now],
-                               0)[0] if (self.pool.busy_until > now).any() else now + 1.0
-            heapq.heappush(self._heap, (float(nxt), self._seq, "retry", job))
-            self._seq += 1
-            return
+            # Distinguish a transient shortage (devices will free soon) from
+            # a PERMANENT one (devices failed forever / selection larger than
+            # the reachable pool) — re-enqueueing a retry for the latter
+            # would livelock the event loop.
+            reachable = int(np.count_nonzero(np.isfinite(self.pool.busy_until)))
+            if reachable == 0:
+                warnings.warn(f"job {job}: no device can ever become "
+                              "available again; abandoning remaining rounds",
+                              RuntimeWarning)
+                js.done = True
+                return
+            if reachable < ctx.n_sel:
+                if job not in self._clamp_warned:
+                    self._clamp_warned.add(job)
+                    warnings.warn(
+                        f"job {job}: selection {ctx.n_sel} permanently "
+                        f"exceeds the {reachable} reachable device(s); "
+                        "clamping", RuntimeWarning)
+                ctx.n_sel = reachable
+            if avail < ctx.n_sel:
+                # Transient: wait for the next FINITE release event.
+                b = self.pool.busy_until
+                pending = b[(b > now) & np.isfinite(b)]
+                nxt = float(pending.min()) if pending.size else now + 1.0
+                heapq.heappush(self._heap, (nxt, self._seq, "retry", job))
+                self._seq += 1
+                return
         plan = self.scheduler.schedule(ctx)
         # Realized time includes any remaining busy time (release_horizon > 0).
-        times = self.pool.sample_times(job, js.config.local_epochs) + self._wait_times(now)
+        # Preallocated buffers: valid until this launch returns (nothing
+        # below stores a view of them).
+        times = self.pool.sample_times_into(
+            job, js.config.local_epochs, self._times_buf)
+        np.subtract(self.pool.busy_until, now, out=self._wait_buf)
+        np.maximum(self._wait_buf, 0.0, out=self._wait_buf)
+        times += self._wait_buf
         sel_ids = np.flatnonzero(plan)
 
         # Straggler mitigation: with over-provisioning the round ends when the
@@ -175,10 +226,11 @@ class MultiJobEngine:
         round_time = float(times[survivors].max())
         t_end = now + round_time
         # Devices are busy until THEIR OWN finish time (then free for other jobs).
-        per_dev_busy = np.full(self.pool.num_devices, 0.0)
+        per_dev_busy = self._busy_buf  # only masked entries are read by occupy
         per_dev_busy[sel_ids] = now + times[sel_ids]
         per_dev_busy[failed] = t_end + self.failure_cooldown  # quarantine
-        busy_mask = np.zeros(self.pool.num_devices, dtype=bool)
+        busy_mask = self._mask_buf
+        busy_mask[:] = False
         busy_mask[sel_ids] = True
         self.pool.occupy(busy_mask, per_dev_busy)
 
@@ -193,6 +245,7 @@ class MultiJobEngine:
             plan=plan, survivors=survivors, failed=failed,
             dropped=np.concatenate([dropped_straggler, failed]),
             t_start=now, cost=cost, fairness=fairness, round_time=round_time,
+            est_cost=getattr(self.scheduler, "last_estimated_cost", None),
             ctx=ctx,
         )
         heapq.heappush(self._heap, (float(t_end), self._seq, "finish", job))
@@ -210,7 +263,8 @@ class MultiJobEngine:
             job=job, round_idx=js.round_idx, t_start=f["t_start"], t_end=now,
             round_time=f["round_time"], cost=f["cost"], fairness=f["fairness"],
             loss=metrics["loss"], accuracy=metrics["accuracy"],
-            device_ids=f["survivors"], dropped=f["dropped"]))
+            device_ids=f["survivors"], dropped=f["dropped"],
+            est_cost=f["est_cost"]))
 
         self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
         js.total_round_time += f["round_time"]
@@ -254,12 +308,16 @@ class MultiJobEngine:
             key = js.config.model.name
             if key in out:
                 key = f"{key}#{m}"
+            # All fields must be well-defined for jobs with ZERO completed
+            # rounds (abandoned before first finish, or clamped away).
             out[key] = dict(
                 rounds=js.round_idx,
                 final_accuracy=recs[-1].accuracy if recs else 0.0,
                 best_accuracy=max((r.accuracy for r in recs), default=0.0),
                 time_to_target=js.reached_target_at,
                 total_round_time=js.total_round_time,
+                mean_round_time=(js.total_round_time / js.round_idx
+                                 if js.round_idx else 0.0),
                 makespan=recs[-1].t_end if recs else 0.0,
             )
         return out

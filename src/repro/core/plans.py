@@ -20,17 +20,66 @@ def plan_from_indices(num_devices: int, idx) -> np.ndarray:
     return p
 
 
+def random_plan_indices(
+    rng: np.random.Generator, available: np.ndarray, n_sel: int, count: int
+) -> np.ndarray:
+    """(count, n_sel) int32 device ids — uniform sampling without replacement.
+
+    Fully vectorized: one (count, |avail|) key draw + batched argpartition,
+    instead of ``count`` sequential ``rng.choice`` calls — the difference
+    between milliseconds and minutes when proposing 4096 candidates over a
+    100k-device fleet. This INDEX form is also the scoring core's fast
+    path (``scoring.score_plan_indices`` never touches a (P, K) dense
+    array); ``random_plans`` is the same draw scattered to dense bool.
+    """
+    avail_idx = np.flatnonzero(available)
+    if avail_idx.size < n_sel:
+        raise ValueError(f"need {n_sel} available devices, have {avail_idx.size}")
+    if n_sel == 0 or count == 0:
+        return np.zeros((count, n_sel), dtype=np.int32)
+    keys = rng.random((count, avail_idx.size))
+    sel = np.argpartition(keys, n_sel - 1, axis=1)[:, :n_sel]
+    return avail_idx[sel].astype(np.int32)
+
+
+def indices_to_plans(idx: np.ndarray, num_devices: int) -> np.ndarray:
+    """(count, n_sel) device ids -> (count, K) dense bool plans."""
+    idx = np.asarray(idx)
+    plans = np.zeros((idx.shape[0], num_devices), dtype=bool)
+    if idx.size:
+        rows = np.repeat(np.arange(idx.shape[0]), idx.shape[1])
+        plans[rows, idx.ravel()] = True
+    return plans
+
+
 def random_plans(
     rng: np.random.Generator, available: np.ndarray, n_sel: int, count: int
 ) -> np.ndarray:
     """(count, K) random valid plans drawn from the available set."""
-    avail_idx = np.flatnonzero(available)
-    if avail_idx.size < n_sel:
-        raise ValueError(f"need {n_sel} available devices, have {avail_idx.size}")
-    plans = np.zeros((count, available.shape[0]), dtype=bool)
-    for i in range(count):
-        sel = rng.choice(avail_idx, size=n_sel, replace=False)
-        plans[i, sel] = True
+    idx = random_plan_indices(rng, available, n_sel, count)
+    return indices_to_plans(idx, available.shape[0])
+
+
+def gumbel_topk_plans(
+    rng: np.random.Generator, logits: np.ndarray, available: np.ndarray,
+    n_sel: int
+) -> np.ndarray:
+    """(count, K) plans via batched Gumbel top-k over per-plan logits.
+
+    ``logits``: (count, K) (or (K,), broadcast) — a Plackett-Luce draw
+    without replacement per row, restricted to the available set. This is
+    the shared candidate-proposal primitive (BODS structured candidates,
+    RLDS policy converter) in one vectorized pass.
+    """
+    logits = np.atleast_2d(np.asarray(logits, dtype=np.float64))
+    count, K = logits.shape
+    g = logits + rng.gumbel(size=(count, K))
+    g = np.where(available[None, :], g, -np.inf)
+    plans = np.zeros((count, K), dtype=bool)
+    if n_sel == 0 or count == 0:
+        return plans
+    sel = np.argpartition(-g, n_sel - 1, axis=1)[:, :n_sel]
+    np.put_along_axis(plans, sel, True, axis=1)
     return plans
 
 

@@ -30,13 +30,22 @@ class SchedulingContext:
 
 
 class SchedulerBase(abc.ABC):
-    """Stateful per-experiment scheduler. One instance schedules ALL jobs."""
+    """Stateful per-experiment scheduler. One instance schedules ALL jobs.
+
+    ALL batched plan evaluation flows through ``repro.core.scoring`` (via
+    ``cost_model.cost_batch``): the searchers (BODS/RLDS/genetic/SA/DNN)
+    score their candidate sets there, and the closed-form baselines
+    (greedy/FedCS/random) score their chosen plan there via
+    ``_score_plan`` — one jitted scoring path under every scheduler.
+    """
 
     name: str = "base"
 
     def __init__(self, cost_model: CostModel, seed: int = 0):
         self.cost_model = cost_model
         self.rng = np.random.default_rng(seed)
+        # Estimated Formula-2 cost of the most recently returned plan.
+        self.last_estimated_cost: Optional[float] = None
 
     @abc.abstractmethod
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
@@ -68,3 +77,14 @@ class SchedulerBase(abc.ABC):
             other_costs=0.0,
             times=ctx.expected_times,
         )
+
+    # Closed-form schedulers (greedy/FedCS/random) call this on their chosen
+    # plan so even non-searching baselines flow through the scoring core.
+    # Uses the INDEX fast path (n_sel gathers, not a K-wide dense pass) and
+    # feeds the engine's RoundRecord.est_cost — the estimated-vs-realized
+    # residual is exactly the quantity the learned schedulers model.
+    def _score_plan(self, ctx: SchedulingContext, plan: np.ndarray) -> np.ndarray:
+        idx = np.flatnonzero(plan)[None, :]
+        self.last_estimated_cost = float(self.cost_model.cost_indices(
+            ctx.expected_times, ctx.counts, idx)[0])
+        return plan

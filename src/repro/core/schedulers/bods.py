@@ -34,12 +34,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plans import random_plans, repair_plan
+from repro.core.plans import gumbel_topk_plans, random_plans, repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.experiment.registry import register_scheduler
 
 MAX_OBS = 256
 NUM_FEATURES = 6
+
+
+def _norm01(x: np.ndarray, mask: np.ndarray = None) -> np.ndarray:
+    """[0, 1]-normalize ``x`` by the spread over ``mask`` (or all of x).
+
+    Degenerate pools are the hazard: with one free device or identical
+    available devices ``ptp`` is ~0 and a naive ``(x - min) / ptp`` blows up
+    into inf/NaN logits. A flat reference set carries no signal, so the
+    normalized feature is defined as all-zeros there.
+    """
+    ref = x[mask] if mask is not None else x
+    if ref.size == 0:
+        return np.zeros(x.shape, dtype=np.float64)
+    lo = float(ref.min())
+    spread = float(np.ptp(ref))
+    if not np.isfinite(spread) or spread < 1e-9:
+        return np.zeros(x.shape, dtype=np.float64)
+    return np.clip((x - lo) / spread, 0.0, 1.0)
 
 
 @jax.jit
@@ -153,20 +171,18 @@ class BODSScheduler(SchedulerBase):
     # ---- candidate generation ----
 
     def _structured_candidates(self, ctx: SchedulingContext, count: int) -> np.ndarray:
-        """Gumbel top-k draws with random time/fairness bias weights."""
-        K = ctx.available.shape[0]
-        t = ctx.expected_times
-        t_norm = (t - t[ctx.available].min()) / (np.ptp(t[ctx.available]) + 1e-12)
-        c_norm = (ctx.counts - ctx.counts.min()) / (np.ptp(ctx.counts) + 1e-12)
-        out = np.zeros((count, K), dtype=bool)
+        """Gumbel top-k draws with random time/fairness bias weights.
+
+        Normalization is degenerate-safe (``_norm01``): a pool where all
+        available devices are identical, or only one is free, yields flat
+        zero logits (pure-random proposals) instead of NaN.
+        """
+        t_norm = _norm01(ctx.expected_times, ctx.available)
+        c_norm = _norm01(ctx.counts)
         w_time = self.rng.uniform(0.0, 6.0, count)
         w_fair = self.rng.uniform(0.0, 4.0, count)
         logits = -w_time[:, None] * t_norm[None, :] - w_fair[:, None] * c_norm[None, :]
-        logits = np.where(ctx.available[None, :], logits, -np.inf)
-        g = logits + self.rng.gumbel(size=(count, K))
-        sel = np.argsort(-g, axis=1, kind="stable")[:, : ctx.n_sel]
-        np.put_along_axis(out, sel, True, axis=1)
-        return out
+        return gumbel_topk_plans(self.rng, logits, ctx.available, ctx.n_sel)
 
     # ---- Algorithm 1, Lines 3-4: candidates + EI argmax ----
 
@@ -208,7 +224,9 @@ class BODSScheduler(SchedulerBase):
             jnp.asarray(cand_feats),
             jnp.asarray(cand_est / sd),
             jnp.asarray(self.gp_noise, jnp.float32)))
-        return cands[int(np.argmax(ei))]
+        choice = int(np.argmax(ei))
+        self.last_estimated_cost = float(cand_est[choice])
+        return cands[choice]
 
     # ---- Algorithm 1, Lines 6-7: realized cost becomes an observation ----
 

@@ -75,10 +75,10 @@ class DNNScheduler(SchedulerBase):
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
         cands = random_plans(self.rng, ctx.available, ctx.n_sel, self.num_candidates)
         if self.rng.random() < self.epsilon or self._valid.sum() < 8:
-            return cands[self.rng.integers(0, len(cands))]
+            return self._score_plan(ctx, cands[self.rng.integers(0, len(cands))])
         feats = self._featurize(ctx, cands)
         pred = np.asarray(_mlp(self.params, jnp.asarray(feats)))
-        return cands[int(np.argmin(pred))]
+        return self._score_plan(ctx, cands[int(np.argmin(pred))])
 
     def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
         f = self._featurize(ctx, plan[None])[0]

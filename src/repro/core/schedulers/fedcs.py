@@ -28,9 +28,11 @@ class FedCSScheduler(SchedulerBase):
         times = ctx.expected_times
         deadline = np.quantile(times[avail], self.deadline_quantile)
         order = self.rng.permutation(avail)
-        chosen = [k for k in order if times[k] <= deadline][: ctx.n_sel]
-        if len(chosen) < ctx.n_sel:  # relax: admit the fastest remaining
-            rest = [k for k in order if k not in set(chosen)]
-            rest.sort(key=lambda k: times[k])
-            chosen += rest[: ctx.n_sel - len(chosen)]
-        return plan_from_indices(ctx.available.shape[0], chosen)
+        fits = times[order] <= deadline
+        chosen = order[fits][: ctx.n_sel]
+        if chosen.size < ctx.n_sel:  # relax: admit the fastest remaining
+            rest = order[~fits]
+            rest = rest[np.argsort(times[rest], kind="stable")]
+            chosen = np.concatenate([chosen, rest[: ctx.n_sel - chosen.size]])
+        plan = plan_from_indices(ctx.available.shape[0], chosen)
+        return self._score_plan(ctx, plan)

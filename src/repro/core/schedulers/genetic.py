@@ -31,7 +31,7 @@ class GeneticScheduler(SchedulerBase):
             cost = self._cost_of(ctx, pop)
             pop = self._next_generation(ctx, pop, cost)
         cost = self._cost_of(ctx, pop)
-        return pop[int(np.argmin(cost))]
+        return self._score_plan(ctx, pop[int(np.argmin(cost))])
 
     def _next_generation(self, ctx, pop, cost):
         P = pop.shape[0]

@@ -19,5 +19,9 @@ class GreedyScheduler(SchedulerBase):
 
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
         times = np.where(ctx.available, ctx.expected_times, np.inf)
-        idx = np.argsort(times, kind="stable")[: ctx.n_sel]
-        return plan_from_indices(ctx.available.shape[0], idx)
+        # argpartition: the paper's top-n_sel-fastest rule is selection, not
+        # a full sort — O(K) instead of O(K log K) on 100k-device fleets.
+        cut = np.argpartition(times, ctx.n_sel - 1)[: ctx.n_sel]
+        idx = cut[np.argsort(times[cut], kind="stable")]
+        plan = plan_from_indices(ctx.available.shape[0], idx)
+        return self._score_plan(ctx, plan)

@@ -14,4 +14,5 @@ class RandomScheduler(SchedulerBase):
     name = "random"
 
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
-        return random_plans(self.rng, ctx.available, ctx.n_sel, 1)[0]
+        plan = random_plans(self.rng, ctx.available, ctx.n_sel, 1)[0]
+        return self._score_plan(ctx, plan)

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plans import repair_plan
+from repro.core.plans import gumbel_topk_plans, repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.experiment.registry import register_scheduler
 from repro.optim import adamw
@@ -145,11 +145,14 @@ class RLDSScheduler(SchedulerBase):
         K = ctx.available.shape[0]
         logits = np.log(np.clip(probs, 1e-9, 1 - 1e-9)) - np.log(
             np.clip(1 - probs, 1e-9, 1.0))
-        score = np.where(ctx.available, logits, -np.inf)
         if explore:
-            score = score + self.rng.gumbel(size=K)
-        plan = np.zeros(K, dtype=bool)
-        plan[np.argsort(-score, kind="stable")[: ctx.n_sel]] = True
+            # Shared vectorized Gumbel top-k primitive (plans.py).
+            plan = gumbel_topk_plans(self.rng, logits, ctx.available,
+                                     ctx.n_sel)[0]
+        else:
+            score = np.where(ctx.available, logits, -np.inf)
+            plan = np.zeros(K, dtype=bool)
+            plan[np.argsort(-score, kind="stable")[: ctx.n_sel]] = True
         if explore:
             free = np.flatnonzero(ctx.available & ~plan)
             on = np.flatnonzero(plan)
@@ -173,7 +176,7 @@ class RLDSScheduler(SchedulerBase):
         plan = self._convert(probs, ctx, explore=True)
         self.epsilon = old_eps
         self._last_feats = feats
-        return plan
+        return self._score_plan(ctx, plan)
 
     def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
         reward = -realized_cost

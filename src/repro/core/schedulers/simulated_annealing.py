@@ -43,4 +43,4 @@ class SimulatedAnnealingScheduler(SchedulerBase):
                 if cur_cost < best_cost:
                     best, best_cost = cur.copy(), cur_cost
             temp *= self.cooling
-        return best
+        return self._score_plan(ctx, best)

@@ -31,6 +31,7 @@ _EXPORTS = {
     "JobSpec": "repro.experiment.spec",
     "PoolSpec": "repro.experiment.spec",
     "CostSpec": "repro.experiment.spec",
+    "FleetSpec": "repro.experiment.spec",
     "ExperimentSpec": "repro.experiment.spec",
     "Experiment": "repro.experiment.spec",
     "ExperimentResult": "repro.experiment.spec",

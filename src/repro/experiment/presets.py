@@ -18,7 +18,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 from repro.experiment.registry import Registry
-from repro.experiment.spec import ExperimentSpec, JobSpec, PoolSpec
+from repro.experiment.spec import ExperimentSpec, FleetSpec, JobSpec, PoolSpec
 
 PRESETS = Registry("preset")
 register_preset = PRESETS.register
@@ -105,6 +105,29 @@ def real_fl_two_job(scheduler: str = "bods", rounds: int = 15,
         name=f"real-fl-two-job-{scheduler}",
         jobs=jobs, pool=PoolSpec(num_devices=num_devices, seed=seed),
         scheduler=scheduler, runtime="real_fl", non_iid=True, n_sel=5)
+
+
+@register_preset("fleet-scale")
+def fleet_scale(scheduler: str = "bods", num_devices: int = 10_000,
+                n_sel: int = None, candidates: int = 512,
+                scoring_backend: str = "jax", n_jobs: int = 2,
+                max_rounds: int = 5, seed: int = 1) -> ExperimentSpec:
+    """Beyond-paper scale regime: a cross-device fleet of 10k-100k devices
+    (cf. Liu et al., arXiv:2211.13430) scheduled through the batched
+    jit-compiled scoring core. The ``fleet`` axis carries pool size,
+    candidate count, and scoring backend; everything else stays the
+    quickstart scheduler-plane setup."""
+    n_sel = n_sel or max(1, num_devices // 100)
+    return ExperimentSpec(
+        name=f"fleet-scale-{scheduler}-K{num_devices}",
+        jobs=tuple(JobSpec(name="clf", target_metric=0.95,
+                           max_rounds=max_rounds) for _ in range(n_jobs)),
+        pool=PoolSpec(seed=seed),
+        fleet=FleetSpec(num_devices=num_devices, n_sel=n_sel,
+                        candidates=candidates,
+                        scoring_backend=scoring_backend),
+        scheduler=scheduler, runtime="synthetic",
+        runtime_kwargs={"seed": 2})
 
 
 @register_preset("fault-injection")

@@ -112,12 +112,31 @@ class CostSpec:
     delta_fairness: bool = True
     calibrate: bool = True
 
-    def build(self, pool: DevicePool, taus: List[float], n_sel: int) -> CostModel:
+    def build(self, pool: DevicePool, taus: List[float], n_sel: int,
+              scoring_backend: str = "auto") -> CostModel:
         cm = CostModel(pool, alpha=self.alpha, beta=self.beta,
-                       delta_fairness=self.delta_fairness)
+                       delta_fairness=self.delta_fairness,
+                       scoring_backend=scoring_backend)
         if self.calibrate:
             cm.calibrate(taus, n_sel=n_sel)
         return cm
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Fleet-scale axis: pool size, candidate count, and scoring backend.
+
+    ``num_devices``/``n_sel`` override the pool/engine sizing when set
+    (so one preset sweeps K without re-deriving the rest of the spec);
+    ``candidates`` overrides the candidate-set size of searching schedulers
+    (BODS/DNN ``num_candidates``, genetic ``population``); ``scoring_backend``
+    selects the plan-scoring path: ``numpy | jax | pallas | auto``.
+    """
+
+    num_devices: Optional[int] = None
+    n_sel: Optional[int] = None
+    candidates: Optional[int] = None
+    scoring_backend: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +148,11 @@ class ExperimentSpec:
     jobs: Tuple[JobSpec, ...]
     pool: PoolSpec = PoolSpec()
     cost: CostSpec = CostSpec()
+    fleet: FleetSpec = FleetSpec()
+    # Convenience alias for fleet.scoring_backend (wins when set), so
+    # ``ExperimentSpec(..., scoring_backend="jax")`` and
+    # ``--set scoring_backend=jax`` work without nesting.
+    scoring_backend: Optional[str] = None
     scheduler: str = "random"
     scheduler_seed: int = 0
     scheduler_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -151,18 +175,45 @@ class ExperimentSpec:
 
     # ---- construction ----
 
+    def effective_num_devices(self) -> int:
+        return self.fleet.num_devices or self.pool.num_devices
+
     def effective_n_sel(self) -> int:
-        return self.n_sel or max(1, int(round(0.1 * self.pool.num_devices)))
+        n = self.fleet.n_sel or self.n_sel
+        return n or max(1, int(round(0.1 * self.effective_num_devices())))
+
+    def effective_scoring_backend(self) -> str:
+        return self.scoring_backend or self.fleet.scoring_backend
+
+    def _candidate_kwargs(self) -> Dict[str, int]:
+        """Map fleet.candidates onto the scheduler's own knob, if it has one."""
+        if self.fleet.candidates is None:
+            return {}
+        import inspect
+
+        factory = SCHEDULERS.get(self.scheduler)
+        fn = factory.__init__ if inspect.isclass(factory) else factory
+        params = inspect.signature(fn).parameters
+        for knob in ("num_candidates", "population"):
+            if knob in params:
+                return {knob: int(self.fleet.candidates)}
+        return {}
 
     def build(self) -> "Experiment":
         jobs = [js.to_job_config(i) for i, js in enumerate(self.jobs)]
-        pool = self.pool.build(len(jobs))
+        pool_spec = self.pool
+        if self.fleet.num_devices is not None:
+            pool_spec = dataclasses.replace(
+                pool_spec, num_devices=self.fleet.num_devices)
+        pool = pool_spec.build(len(jobs))
         n_sel = self.effective_n_sel()
         cost_model = self.cost.build(
-            pool, [float(j.local_epochs) for j in jobs], n_sel)
+            pool, [float(j.local_epochs) for j in jobs], n_sel,
+            scoring_backend=self.effective_scoring_backend())
         # scheduler_kwargs may override the default seed/cost_model wiring
         scheduler = SCHEDULERS.create(self.scheduler, **{
             "cost_model": cost_model, "seed": self.scheduler_seed,
+            **self._candidate_kwargs(),
             **dict(self.scheduler_kwargs)})
         runtime = RUNTIMES.get(self.runtime)(
             self, jobs, pool, **dict(self.runtime_kwargs))
@@ -199,6 +250,7 @@ class ExperimentSpec:
                 pool[key] = tuple(pool[key])
         d["pool"] = PoolSpec(**pool)
         d["cost"] = CostSpec(**d.get("cost", {}))
+        d["fleet"] = FleetSpec(**d.get("fleet", {}))
         return cls(**d)
 
     @classmethod

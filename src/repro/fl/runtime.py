@@ -120,9 +120,19 @@ class SyntheticRuntime:
                  noise: float = 0.004):
         rng = np.random.default_rng(seed)
         self.num_classes = num_classes
-        self.device_classes = np.stack([
-            rng.choice(num_classes, size=classes_per_device, replace=False)
-            for _ in range(num_devices)])
+        if num_devices > 4096:
+            # Fleet pools: batched sampling-without-replacement (random keys
+            # + argpartition) — one vectorized draw instead of num_devices
+            # sequential rng.choice calls (milliseconds at K=100k). Same
+            # distribution as the sequential draw; realizations differ, so
+            # paper-scale pools keep the historical per-device stream below.
+            keys = rng.random((num_devices, num_classes))
+            self.device_classes = np.argpartition(
+                keys, classes_per_device - 1, axis=1)[:, :classes_per_device]
+        else:
+            self.device_classes = np.stack([
+                rng.choice(num_classes, size=classes_per_device, replace=False)
+                for _ in range(num_devices)])
         self.seen = [np.zeros(num_classes, dtype=np.float64) for _ in range(num_jobs)]
         self.rounds = np.zeros(num_jobs, dtype=np.int64)
         if np.ndim(b0) > 0:
@@ -134,8 +144,8 @@ class SyntheticRuntime:
         self.rng = rng
 
     def run_round(self, job_id: int, device_ids: np.ndarray, round_idx: int):
-        for k in np.asarray(device_ids):
-            self.seen[job_id][self.device_classes[k]] += 1.0
+        hit = self.device_classes[np.asarray(device_ids)].ravel()
+        np.add.at(self.seen[job_id], hit, 1.0)
         self.rounds[job_id] += 1
         # Coverage = 1 - TV(seen-class distribution, uniform): schedulers that
         # starve devices starve their classes and cap below the uniform optimum.

@@ -83,3 +83,13 @@ def rmsnorm(x, scale, eps: float = 1e-6, impl: Optional[str] = None):
         return _ref.rmsnorm(x, scale, eps)
     from repro.kernels import rmsnorm as rn
     return rn.rmsnorm(x, scale, eps, interpret=(impl == "interpret"))
+
+
+def sched_plan_stats(times, weights, plans, impl: Optional[str] = None):
+    """Per-plan scoring stats for the scheduler core (see core/scoring.py)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.sched_plan_stats(times, weights, plans)
+    from repro.kernels import sched_score as ss
+    return ss.plan_stats(times, weights, plans,
+                         interpret=(impl == "interpret"))

@@ -237,3 +237,18 @@ def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarra
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---- scheduler plan-scoring stats (fleet-scale scoring core) ----
+
+def sched_plan_stats(times: jnp.ndarray, weights: jnp.ndarray,
+                     plans: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels/sched_score.py: (P, 3) [masked max time,
+    selected count, selected weight sum] per candidate plan."""
+    sel = plans != 0
+    tmax = jnp.max(jnp.where(sel, times[None, :].astype(jnp.float32), NEG_INF),
+                   axis=1)
+    n = jnp.sum(jnp.where(sel, 1.0, 0.0), axis=1)
+    ws = jnp.sum(jnp.where(sel, weights[None, :].astype(jnp.float32), 0.0),
+                 axis=1)
+    return jnp.stack([tmax, n, ws], axis=1)

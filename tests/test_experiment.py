@@ -200,3 +200,46 @@ def test_cli_preset_with_overrides(tmp_path, capsys):
     assert spec.scheduler == "random"
     assert spec.jobs[0].max_rounds == 5
     assert spec.n_sel == 4
+
+
+# ---- fleet axis ----
+
+def test_fleet_spec_round_trip_and_build():
+    from repro.experiment import FleetSpec
+
+    spec = tiny_spec(fleet=FleetSpec(num_devices=80, n_sel=6, candidates=32,
+                                     scoring_backend="jax"))
+    spec2 = ExperimentSpec.from_json(spec.to_json())
+    assert spec2 == spec
+    exp = spec.build()
+    assert exp.engine.pool.num_devices == 80       # fleet overrides pool
+    assert exp.engine.n_sel == 6
+    assert exp.engine.cost_model.scoring_backend == "jax"
+
+
+def test_fleet_candidates_map_to_scheduler_knob():
+    from repro.experiment import FleetSpec
+
+    fleet = FleetSpec(candidates=48)
+    bods = tiny_spec(scheduler="bods", fleet=fleet).build()
+    assert bods.engine.scheduler.num_candidates == 48
+    gen = tiny_spec(scheduler="genetic", fleet=fleet).build()
+    assert gen.engine.scheduler.population == 48
+    # schedulers without a candidate knob just ignore the axis
+    tiny_spec(scheduler="greedy", fleet=fleet).build()
+
+
+def test_top_level_scoring_backend_wins():
+    from repro.experiment import FleetSpec
+
+    spec = tiny_spec(fleet=FleetSpec(scoring_backend="numpy"),
+                     scoring_backend="jax")
+    assert spec.build().engine.cost_model.scoring_backend == "jax"
+
+
+def test_fleet_scale_preset_runs_end_to_end():
+    spec = get_preset("fleet-scale", num_devices=300, scheduler="random",
+                      max_rounds=2)
+    res = spec.run()
+    assert len(res.records) > 0
+    assert all("mean_round_time" in v for v in res.summary.values())

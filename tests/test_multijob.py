@@ -112,3 +112,42 @@ def test_counts_match_records():
     for r in eng.records:
         counts[r.job][r.device_ids] += 1
     np.testing.assert_array_equal(counts, eng.counts)
+
+
+def test_over_provision_exceeding_pool_is_clamped():
+    """n_sel * over_provision > K used to retry-loop forever; now clamps."""
+    with pytest.warns(RuntimeWarning, match="clamped"):
+        eng = build(n_jobs=1, over_provision=20.0)  # 5 * 20 = 100 > K=50
+    assert int(round(eng.n_sel * eng.over_provision)) <= eng.pool.num_devices
+    eng.run()
+    assert eng.summary()["t"]["rounds"] > 0
+
+
+def test_permanent_device_loss_does_not_livelock():
+    """Failing most of the pool forever must clamp/abandon, not spin."""
+    eng = build(n_jobs=1)
+    eng.pool.fail(np.arange(48))  # 2 reachable devices < n_sel=5, forever
+    with pytest.warns(RuntimeWarning):
+        eng.run()  # terminates (clamped selection or abandoned job)
+    s = eng.summary()["t"]
+    assert s["rounds"] >= 0  # summary stays well-defined either way
+
+
+def test_total_device_loss_abandons_job():
+    eng = build(n_jobs=1)
+    eng.pool.fail(np.arange(50))  # nothing can ever free again
+    with pytest.warns(RuntimeWarning, match="abandoning"):
+        eng.run()
+    s = eng.summary()["t"]
+    assert s["rounds"] == 0
+    assert s["mean_round_time"] == 0.0
+    assert s["makespan"] == 0.0
+    assert s["final_accuracy"] == 0.0
+
+
+def test_summary_reports_mean_round_time():
+    eng = build()
+    eng.run()
+    for v in eng.summary().values():
+        assert v["mean_round_time"] == pytest.approx(
+            v["total_round_time"] / v["rounds"])

@@ -128,3 +128,37 @@ def test_fairness_batch_matches_scalar(seed):
     batch = cm.fairness_batch(counts, plans)
     for i, p in enumerate(plans):
         assert batch[i] == pytest.approx(cm.fairness(counts, p))
+
+
+def test_bods_degenerate_pool_no_nan():
+    """Identical available devices / single free device must not produce NaN
+    logits in the structured candidate sampler."""
+    pool = DevicePool.heterogeneous(20, 1, seed=0)
+    pool.a[:] = 1e-3          # all devices identical
+    pool.mu[:] = 5.0
+    pool.data_sizes[:] = 400.0
+    pool.invalidate()         # in-place mutation -> drop SoA caches
+    cm = CostModel(pool)
+    cm.calibrate([5.0], n_sel=3)
+    sched = get_scheduler("bods", cost_model=cm, seed=0)
+    ctx = make_ctx(pool, n_sel=3)
+    plan = sched.schedule(ctx)
+    validate_plan(plan, ctx.available, 3)
+    # only n_sel free devices at all: ptp over one value is 0
+    occ = np.arange(3, 20)
+    ctx2 = make_ctx(pool, n_sel=3, occupied=occ, round_idx=1)
+    plan2 = sched.schedule(ctx2)
+    validate_plan(plan2, ctx2.available, 3)
+
+
+def test_baselines_record_estimated_cost():
+    """greedy/fedcs/random route their chosen plan through the scoring core."""
+    pool = DevicePool.heterogeneous(30, 1, seed=2)
+    cm = CostModel(pool)
+    cm.calibrate([5.0], n_sel=5)
+    for name in ("greedy", "fedcs", "random"):
+        sched = get_scheduler(name, cost_model=cm, seed=0)
+        assert sched.last_estimated_cost is None
+        plan = sched.schedule(make_ctx(pool, n_sel=5))
+        validate_plan(plan, np.ones(30, bool), 5)
+        assert np.isfinite(sched.last_estimated_cost)
