@@ -100,10 +100,12 @@ def bench_scoring(Ks, Ps, backends) -> list:
                 r["speedup_vs_numpy"] = (r["plans_per_sec"] / base
                                          if base else None)
                 rows.append(r)
+                speedup = (f"x{r['speedup_vs_numpy']:.1f} vs numpy"
+                           if r["speedup_vs_numpy"] is not None
+                           else "baseline skipped")
                 print(f"  K={K:>6} P={P:>5} {backend:>6}/{form:<5}: "
                       f"{r['plans_per_sec']:>12.0f} plans/s "
-                      f"({r['sec_per_call'] * 1e3:.2f} ms/call, "
-                      f"x{r['speedup_vs_numpy']:.1f} vs numpy)")
+                      f"({r['sec_per_call'] * 1e3:.2f} ms/call, {speedup})")
     return rows
 
 

@@ -43,12 +43,27 @@ from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 
 
 class JobRuntime(Protocol):
-    """Executes the real training for one round of one job."""
+    """Executes the real training for one round of one job.
+
+    The engine resolves the ROUND'S REALIZED participation at launch time
+    (over-provisioned stragglers cut, failed devices dropped) and hands the
+    runtime the surviving cohort twice: once through the optional
+    ``begin_round`` hook at launch (so batching runtimes can overlap/fuse
+    training of concurrently in-flight jobs), and once through ``run_round``
+    at the simulated finish instant, which must return the metrics."""
 
     def run_round(self, job_id: int, device_ids: np.ndarray, round_idx: int
                   ) -> Dict[str, float]:
-        """Train the scheduled devices locally + aggregate. Returns metrics
-        with at least {'loss': float, 'accuracy': float}."""
+        """Train the scheduled devices locally + aggregate. ``device_ids`` is
+        the realized survivor cohort (the engine's weight mask: exactly these
+        devices aggregate). Returns metrics with at least
+        {'loss': float, 'accuracy': float}."""
+
+    # Optional: ``begin_round(job_id, device_ids, round_idx)`` — same
+    # realized cohort, announced when the round LAUNCHES. Runtimes that
+    # batch cross-job execution (``repro.fl.runtime.FusedMultiRuntime``)
+    # queue work here and flush every pending job in one dispatch at the
+    # first ``run_round`` demand.
 
 
 @dataclasses.dataclass
@@ -240,6 +255,14 @@ class MultiJobEngine:
         # Realized cost (scheduler feedback): realized straggler time + fairness.
         cost = float(cm.alpha * round_time / cm.time_scale
                      + cm.beta * dfair / cm.fairness_scale)
+
+        # Announce the realized cohort to batching runtimes at LAUNCH time:
+        # training is a pure function of (params, survivors), so a fused
+        # runtime can execute it any time before the finish event and batch
+        # every concurrently in-flight job into one dispatch.
+        begin = getattr(self.runtime, "begin_round", None)
+        if begin is not None:
+            begin(job, survivors, js.round_idx)
 
         self._in_flight[job] = dict(
             plan=plan, survivors=survivors, failed=failed,

@@ -32,6 +32,7 @@ _EXPORTS = {
     "PoolSpec": "repro.experiment.spec",
     "CostSpec": "repro.experiment.spec",
     "FleetSpec": "repro.experiment.spec",
+    "TrainSpec": "repro.experiment.spec",
     "ExperimentSpec": "repro.experiment.spec",
     "Experiment": "repro.experiment.spec",
     "ExperimentResult": "repro.experiment.spec",

@@ -6,15 +6,19 @@ object implementing the engine's ``JobRuntime`` protocol. Two kinds ship:
 - ``synthetic`` — the closed-form convergence model (scheduler-plane studies,
   fast tests). Per-job ``convergence_rate`` from the spec's jobs becomes the
   runtime's per-job ``b0`` array.
-- ``real_fl`` — the paper's testbed: one ``FLJobRuntime`` per job doing real
-  vmap'd local SGD + FedAvg on synthetic prototype data partitioned IID or
-  non-IID (§5), behind a ``MultiRuntime`` adapter.
+- ``real_fl`` — the paper's testbed: REAL vmap'd local SGD + FedAvg on
+  synthetic prototype data partitioned IID or non-IID (§5). By default this
+  is the fused, recompile-free ``FusedMultiRuntime`` (bucketed cohort
+  shapes, device-resident data, cross-job batched dispatch); the spec's
+  ``train`` axis (``TrainSpec``) selects the unfused per-job
+  ``FLJobRuntime`` baseline and carries the bucket/eval_every knobs.
 
 Registering a new kind is one decorator: ``@register_runtime("my_kind")``.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import List
 
 import numpy as np
@@ -22,8 +26,8 @@ import numpy as np
 from repro.config.base import JobConfig
 from repro.core.devices import DevicePool
 from repro.experiment.registry import register_runtime
-from repro.fl.runtime import (DEFAULT_B0, FLJobRuntime, MultiRuntime,
-                              SyntheticRuntime)
+from repro.fl.runtime import (DEFAULT_B0, FLJobRuntime, FusedMultiRuntime,
+                              MultiRuntime, SyntheticRuntime)
 
 
 @register_runtime("synthetic")
@@ -51,7 +55,7 @@ def real_fl_runtime(spec, jobs: List[JobConfig], pool: DevicePool, *,
     from repro.data.synthetic import make_classification_dataset
     from repro.fl.partition import iid_partition, noniid_partition
 
-    runtimes = []
+    datasets = []
     for jid, job in enumerate(jobs):
         cfg = job.model
         x, y = make_classification_dataset(
@@ -70,6 +74,33 @@ def real_fl_runtime(spec, jobs: List[JobConfig], pool: DevicePool, *,
                                  samples_per_device=samples_per_job
                                  // pool.num_devices,
                                  seed=data_seed + jid)
-        runtimes.append(FLJobRuntime(job, x, y, part, ex, ey,
-                                     seed=init_seed + jid))
-    return MultiRuntime(runtimes)
+        datasets.append((x, y, part, ex, ey))
+
+    train = spec.train
+    if train.fused:
+        buckets = train.buckets
+        if buckets is None:
+            # Align buckets with the engine's operating points: the steady
+            # cohort (n_sel) and the over-provisioned selection pad to
+            # themselves, so the common case trains with ZERO padded lanes
+            # and the power-of-two ladder only absorbs failure jitter.
+            from repro.fl.runtime import default_buckets
+
+            K = pool.num_devices
+            n_hot = spec.effective_n_sel()
+            sched = min(K, max(n_hot, int(round(n_hot * spec.over_provision))))
+            buckets = tuple(sorted(set(default_buckets(K)) | {n_hot, sched}))
+        # One fused runtime over all jobs: the per-job init seeds match the
+        # unfused path (seed=init_seed + job_id) so fused/unfused runs are
+        # comparable round-for-round at equal specs.
+        return FusedMultiRuntime(jobs, datasets, seed=init_seed,
+                                 buckets=buckets,
+                                 eval_every=train.eval_every)
+    if train.buckets is not None or train.eval_every != 1:
+        warnings.warn(
+            "TrainSpec.buckets/eval_every only apply to the fused runtime; "
+            "the unfused baseline has no cohort buckets and evaluates every "
+            "round", RuntimeWarning)
+    return MultiRuntime([
+        FLJobRuntime(job, *ds, seed=init_seed + jid)
+        for jid, (job, ds) in enumerate(zip(jobs, datasets))])

@@ -3,8 +3,9 @@
 A spec is a frozen, JSON-round-trippable description of a complete multi-job
 federated-learning experiment: the jobs, the device pool, the cost-model
 coefficients, the scheduler (by registry name), the runtime (``synthetic``
-closed-form convergence or ``real_fl`` actual JAX training), and the
-fault/straggler/queueing knobs of the engine. ``spec.build()`` wires the
+closed-form convergence or ``real_fl`` actual JAX training), the training
+execution knobs (``TrainSpec``: fused engine, cohort buckets, eval cadence),
+and the fault/straggler/queueing knobs of the engine. ``spec.build()`` wires the
 ``DevicePool -> CostModel -> calibrate -> scheduler -> runtime ->
 MultiJobEngine`` chain that every example/benchmark/test used to assemble by
 hand; ``spec.run()`` executes it and returns an ``ExperimentResult`` whose
@@ -140,6 +141,27 @@ class FleetSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Training-runtime execution knobs (the fused FL engine).
+
+    ``fused`` selects the recompile-free ``FusedMultiRuntime`` (bucketed
+    cohorts, device-resident data, cross-job batched dispatch) for the
+    ``real_fl`` runtime; False keeps the historical per-job unfused path.
+    ``buckets`` overrides the power-of-two cohort buckets (None -> derived
+    from the pool size); ``eval_every`` evaluates held-out metrics every
+    k-th round per job — skipped rounds report the last evaluated metrics,
+    so target detection lags by < k rounds when k > 1. ``buckets`` and
+    ``eval_every`` apply to the fused runtime only (the unfused baseline
+    has no buckets and evaluates every round; setting them with
+    ``fused=False`` warns).
+    """
+
+    fused: bool = True
+    buckets: Optional[Tuple[int, ...]] = None
+    eval_every: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """A complete multi-job FL experiment. ``build()`` -> ``Experiment``,
     ``run()`` -> ``ExperimentResult``; ``to_dict``/``from_dict`` round-trip
@@ -158,6 +180,7 @@ class ExperimentSpec:
     scheduler_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     runtime: str = "synthetic"
     runtime_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    train: TrainSpec = TrainSpec()
     non_iid: bool = True            # data distribution (both runtime kinds)
     n_sel: Optional[int] = None     # devices per round; None -> 10% of pool
     # Engine knobs: faults, stragglers, queueing-aware release horizon.
@@ -251,6 +274,10 @@ class ExperimentSpec:
         d["pool"] = PoolSpec(**pool)
         d["cost"] = CostSpec(**d.get("cost", {}))
         d["fleet"] = FleetSpec(**d.get("fleet", {}))
+        train = dict(d.get("train", {}))
+        if train.get("buckets") is not None:
+            train["buckets"] = tuple(train["buckets"])
+        d["train"] = TrainSpec(**train)
         return cls(**d)
 
     @classmethod
@@ -266,7 +293,21 @@ class ExperimentSpec:
         with open(path, "w") as f:
             f.write(self.to_json() + "\n")
 
+    _NESTED_TUPLE_FIELDS = ("a_range", "mu_range", "data_range",
+                            "job_weights", "buckets")
+
     def replace(self, **changes) -> "ExperimentSpec":
+        """``dataclasses.replace`` that also accepts dicts for the nested
+        axes (``pool``/``cost``/``fleet``/``train``), merged over the current
+        values — so ``spec.replace(train={"eval_every": 2})`` and the CLI's
+        ``--set train={...}`` work without rebuilding the whole sub-spec."""
+        for key in ("pool", "cost", "fleet", "train"):
+            v = changes.get(key)
+            if isinstance(v, dict):
+                v = {k: (tuple(val) if k in self._NESTED_TUPLE_FIELDS
+                         and val is not None else val)
+                     for k, val in v.items()}
+                changes[key] = dataclasses.replace(getattr(self, key), **v)
         return dataclasses.replace(self, **changes)
 
 

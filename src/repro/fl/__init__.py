@@ -1,14 +1,22 @@
-"""Federated substrate: partitioning, vmap'd local training, FedAvg, runtimes."""
+"""Federated substrate: partitioning, fused vmap'd local training, FedAvg,
+runtimes (fused recompile-free engine + unfused baseline + synthetic)."""
 
 from repro.fl.partition import iid_partition, noniid_partition
-from repro.fl.aggregation import fedavg, fedavg_compressed
-from repro.fl.runtime import FLJobRuntime, SyntheticRuntime
+from repro.fl.aggregation import (fedavg, fedavg_compressed,
+                                  fedavg_compressed_loop)
+from repro.fl.runtime import (FLJobRuntime, FusedMultiRuntime, MultiRuntime,
+                              SyntheticRuntime, bucket_for, default_buckets)
 
 __all__ = [
     "iid_partition",
     "noniid_partition",
     "fedavg",
     "fedavg_compressed",
+    "fedavg_compressed_loop",
     "FLJobRuntime",
+    "FusedMultiRuntime",
+    "MultiRuntime",
     "SyntheticRuntime",
+    "bucket_for",
+    "default_buckets",
 ]

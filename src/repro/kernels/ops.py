@@ -85,6 +85,20 @@ def rmsnorm(x, scale, eps: float = 1e-6, impl: Optional[str] = None):
     return rn.rmsnorm(x, scale, eps, interpret=(impl == "interpret"))
 
 
+def scatter_add(vals, idx, weights, size: int, impl: Optional[str] = None):
+    """Weighted sparse accumulation (compressed-FedAvg server decompression).
+
+    (n, k) vals/idx + (n,) weights -> (size,) f32; see kernels/ref.py for the
+    exact semantics (negative idx = padding).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.scatter_add(vals, idx, weights, size)
+    from repro.kernels import scatter_add as sa
+    return sa.scatter_add(vals, idx, weights, size,
+                          interpret=(impl == "interpret"))
+
+
 def sched_plan_stats(times, weights, plans, impl: Optional[str] = None):
     """Per-plan scoring stats for the scheduler core (see core/scoring.py)."""
     impl = _resolve(impl)

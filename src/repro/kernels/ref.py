@@ -239,6 +239,28 @@ def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarra
     return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
 
 
+# ---- weighted scatter-add (compressed FedAvg aggregation) ----
+
+def scatter_add(vals: jnp.ndarray, idx: jnp.ndarray, weights: jnp.ndarray,
+                size: int) -> jnp.ndarray:
+    """Oracle for kernels/scatter_add.py: weighted sparse accumulation.
+
+    ``vals``: (n, k) per-row sparse values; ``idx``: (n, k) int positions into
+    a flat output of ``size``; ``weights``: (n,) per-row weights. Returns
+    (size,) f32 with out[p] = sum over all (i, j) with idx[i, j] == p of
+    weights[i] * vals[i, j]. Rows may repeat positions; negative positions
+    are treated as padding and dropped (jnp ``.add`` with mode='drop').
+    """
+    wv = vals.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+    flat_idx = idx.reshape(-1)
+    # mode="drop" alone does not help with negatives (jnp wraps them first):
+    # route padding rows to an extra slot past the end and slice it off.
+    flat_idx = jnp.where(flat_idx < 0, size, flat_idx)
+    out = jnp.zeros((size + 1,), jnp.float32).at[flat_idx].add(
+        wv.reshape(-1), mode="drop")
+    return out[:size]
+
+
 # ---- scheduler plan-scoring stats (fleet-scale scoring core) ----
 
 def sched_plan_stats(times: jnp.ndarray, weights: jnp.ndarray,

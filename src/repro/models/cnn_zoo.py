@@ -7,6 +7,7 @@ Params are a flat list of per-layer dicts so they vmap/aggregate trivially
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Tuple
 
 import jax
@@ -66,16 +67,81 @@ def cnn_init(cfg: ModelConfig, seed: int = 0) -> List[Dict]:
     return params
 
 
-def _conv(x, p, stride=1):
+_conv_state = threading.local()
+CONV_IMPLS = ("gemm", "lax")
+
+
+def set_conv_impl(impl: str) -> None:
+    """Select the conv/pool lowering: ``gemm`` (default — im2col + matmul
+    conv and reshape-max pool, the fast path on CPU) or ``lax``
+    (``conv_general_dilated`` + ``reduce_window``, the historical lowering,
+    kept as the semantics reference and the faithful pre-refactor benchmark
+    baseline). Forward math is identical either way (see
+    tests/test_models_smoke.py); max-pool GRADIENTS may route ties
+    differently (both valid subgradients — see ``_maxpool2``).
+
+    Flipping the impl clears the jit caches: the flag is resolved at trace
+    time, so stale compiled executables would otherwise keep the old conv."""
+    assert impl in CONV_IMPLS, impl
+    if impl != get_conv_impl():
+        jax.clear_caches()
+    _conv_state.impl = impl
+
+
+def get_conv_impl() -> str:
+    return getattr(_conv_state, "impl", "gemm")
+
+
+def _conv_lax(x, p, stride=1):
     y = jax.lax.conv_general_dilated(
         x, p["w"], window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return y + p["b"]
 
 
+def _conv(x, p, stride=1):
+    """SAME conv as im2col + GEMM.
+
+    Identical math to ``lax.conv_general_dilated`` (same padding layout),
+    but routed through a dense matmul: XLA:CPU lowers small-kernel NHWC
+    convs through a naive path (~1 GFLOP/s measured on the FL training
+    loop) while its GEMM hits the fast vectorized kernels — 10x+ on the
+    per-round hot path, forward and backward (the adjoint is GEMMs too).
+    """
+    if get_conv_impl() == "lax":
+        return _conv_lax(x, p, stride)
+    w = p["w"]
+    k = w.shape[0]
+    n, h, wd, c = x.shape
+    ho = -(-h // stride)
+    wo = -(-wd // stride)
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - wd, 0)
+    xp = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    cols = [xp[:, i:i + (ho - 1) * stride + 1:stride,
+               j:j + (wo - 1) * stride + 1:stride, :]
+            for i in range(k) for j in range(k)]
+    patches = jnp.concatenate(cols, axis=-1)          # (N, Ho, Wo, k*k*C)
+    y = patches.reshape(n * ho * wo, k * k * c) @ w.reshape(k * k * c, -1)
+    return y.reshape(n, ho, wo, -1) + p["b"]
+
+
 def _maxpool2(x):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    """2x2/2 VALID max-pool. Forward is identical under both lowerings
+    (ragged edge dropped); gradients differ only in TIE-BREAKING at equal
+    window maxima (common: ReLU zeros) — both are valid subgradients. The
+    default reshape-max form's gradient is invariant to extra vmap lanes;
+    ``select_and_scatter`` (the ``lax`` path's backward) broke
+    fused-vs-unfused bitwise parity because its tie choice differed between
+    the batched and unbatched lowerings."""
+    if get_conv_impl() == "lax":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    n, h, w, c = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
 
 
 def _groupnorm(x, p, groups=8):

@@ -43,6 +43,20 @@ def test_spec_json_round_trip():
     restored.build()
 
 
+def test_train_spec_round_trip_and_dict_replace():
+    from repro.experiment import TrainSpec
+
+    spec = tiny_spec(train=TrainSpec(fused=True, buckets=(4, 8), eval_every=3))
+    restored = ExperimentSpec.from_json(spec.to_json())
+    assert restored == spec
+    assert restored.train.buckets == (4, 8)
+    # dict form merges over the current nested value (CLI --set train={...})
+    spec2 = spec.replace(train={"eval_every": 5})
+    assert spec2.train == TrainSpec(fused=True, buckets=(4, 8), eval_every=5)
+    spec3 = spec.replace(train={"buckets": [2, 6]})
+    assert spec3.train.buckets == (2, 6)
+
+
 def test_runtime_kwargs_b0_beats_convergence_rate():
     spec = tiny_spec().replace(
         jobs=(JobSpec(name="j", max_rounds=10, convergence_rate=0.1),),

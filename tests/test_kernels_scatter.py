@@ -1,0 +1,51 @@
+"""Weighted scatter-add kernel vs oracle sweeps (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.scatter_add import scatter_add
+
+CASES = [
+    (3, 17, 64),      # size < lane width (pad path)
+    (8, 32, 300),     # size not a multiple of the block
+    (1, 5, 1000),     # single row
+    (16, 64, 4096),   # multi-tile stream and output
+]
+
+
+@pytest.mark.parametrize("n,k,size", CASES)
+def test_scatter_add_matches_oracle(n, k, size):
+    rng = np.random.default_rng(n * 1000 + k)
+    vals = jnp.asarray(rng.normal(0, 1, (n, k)), jnp.float32)
+    # duplicates both within and across rows exercise the accumulation
+    idx = jnp.asarray(rng.integers(0, size, (n, k)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, (n,)), jnp.float32)
+    out = scatter_add(vals, idx, w, size, block_s=128, block_k=128,
+                      interpret=True)
+    exp = ref.scatter_add(vals, idx, w, size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_scatter_add_negative_idx_is_padding():
+    vals = jnp.asarray([[1.0, 2.0, 3.0]])
+    idx = jnp.asarray([[0, -1, 2]], jnp.int32)
+    w = jnp.asarray([2.0])
+    out = scatter_add(vals, idx, w, 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [2.0, 0.0, 6.0, 0.0],
+                               atol=1e-6)
+    exp = ref.scatter_add(vals, idx, w, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_scatter_add_all_collisions():
+    rng = np.random.default_rng(7)
+    vals = jnp.asarray(rng.normal(0, 1, (4, 9)), jnp.float32)
+    idx = jnp.zeros((4, 9), jnp.int32)  # everything lands on position 0
+    w = jnp.asarray(rng.uniform(0.5, 1.5, (4,)), jnp.float32)
+    out = scatter_add(vals, idx, w, 16, interpret=True)
+    expected = float((np.asarray(vals) * np.asarray(w)[:, None]).sum())
+    assert abs(float(out[0]) - expected) < 1e-4
+    np.testing.assert_allclose(np.asarray(out[1:]), 0.0)

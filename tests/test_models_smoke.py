@@ -107,3 +107,43 @@ def test_decode_step(arch):
     # decode twice more to exercise cache writes
     logits, new_state = lm_decode_step(cfg, params, new_state, tok, length + 1)
     assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["paper-lenet5", "paper-cnn-b",
+                                  "paper-resnet18"])
+def test_cnn_conv_impls_agree(arch):
+    """The GEMM (im2col) conv lowering must match the historical lax conv
+    on full model forwards, and on gradients for pool-free models (max-pool
+    backward legitimately routes gradient to a DIFFERENT tied element under
+    the two lowerings — both valid subgradients, so lenet5's grads are
+    exempt)."""
+    from repro.config.registry import get_arch
+    from repro.models import cnn_zoo
+
+    cfg = get_arch(arch)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (4, *cfg.input_shape)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, cfg.num_classes, 4), jnp.int32)
+    params = cnn_zoo.cnn_init(cfg, seed=0)
+
+    def loss_and_grad():
+        loss, _ = cnn_zoo.cnn_loss_and_accuracy(params, cfg, x, y)
+        g = jax.grad(lambda p: cnn_zoo.cnn_loss_and_accuracy(p, cfg, x, y)[0])(params)
+        return cnn_zoo.cnn_apply(params, cfg, x), loss, g
+
+    try:
+        cnn_zoo.set_conv_impl("gemm")
+        out_g, loss_g, grad_g = loss_and_grad()
+        cnn_zoo.set_conv_impl("lax")
+        out_l, loss_l, grad_l = loss_and_grad()
+    finally:
+        cnn_zoo.set_conv_impl("gemm")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_l),
+                               atol=1e-4, rtol=1e-4)
+    assert abs(float(loss_g) - float(loss_l)) < 1e-5
+    has_pool = any(layer[0] == "convp" for layer in cfg.cnn_spec)
+    if not has_pool:
+        for a, b in zip(jax.tree_util.tree_leaves(grad_g),
+                        jax.tree_util.tree_leaves(grad_l)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-3)

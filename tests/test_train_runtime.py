@@ -1,0 +1,204 @@
+"""Fused training-runtime tests: parity with the unfused path, compile
+stability under varying cohort sizes, bucket logic, eval_every, and the
+partition-size FedAvg weighting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import JobConfig
+from repro.configs.paper_models import lenet5
+from repro.data.synthetic import make_classification_dataset
+from repro.fl.aggregation import fedavg
+from repro.fl.partition import noniid_partition
+from repro.fl.runtime import (FLJobRuntime, FusedMultiRuntime, _fused_group_round,
+                              _local_train_batch, bucket_for, default_buckets)
+
+NUM_DEV = 20
+
+
+def _tiny_cfg():
+    """A small CNN so local training is fast; real conv + fc layers."""
+    cfg = lenet5()
+    return dataclasses.replace(
+        cfg, name="tiny", input_shape=(8, 8, 1),
+        cnn_spec=(("convp", 4, 3), ("flatten",), ("fc", 16)))
+
+
+def _setup(num_jobs=1, samples=600, seed=0):
+    cfg = _tiny_cfg()
+    jobs, datasets = [], []
+    for j in range(num_jobs):
+        x, y = make_classification_dataset(samples, cfg.input_shape,
+                                           cfg.num_classes, noise=1.0,
+                                           seed=seed + j)
+        ex, ey = make_classification_dataset(120, cfg.input_shape,
+                                             cfg.num_classes, noise=1.0,
+                                             seed=seed + 50 + j)
+        part = noniid_partition(y, NUM_DEV, seed=seed + j)
+        jobs.append(JobConfig(job_id=j, model=cfg, target_metric=2.0,
+                              local_epochs=2, batch_size=4, lr=0.05))
+        datasets.append((x, y, part, ex, ey))
+    return jobs, datasets
+
+
+def test_bucket_helpers():
+    assert default_buckets(40) == (4, 8, 16, 32, 40)
+    assert default_buckets(64) == (4, 8, 16, 32, 64)
+    assert bucket_for(1, (4, 8, 16)) == 4
+    assert bucket_for(8, (4, 8, 16)) == 8
+    assert bucket_for(9, (4, 8, 16)) == 16
+    with pytest.raises(ValueError):
+        bucket_for(17, (4, 8, 16))
+
+
+def test_fused_matches_unfused_per_round():
+    """Varying cohort sizes: fused bucketed rounds must reproduce the
+    unfused baseline accuracy to 1e-4 at equal seeds."""
+    jobs, datasets = _setup()
+    unfused = FLJobRuntime(jobs[0], *datasets[0], seed=0)
+    fused = FusedMultiRuntime(jobs, datasets, seed=0)
+    rng = np.random.default_rng(1)
+    for r in range(8):
+        n = int(rng.integers(2, 10))
+        ids = rng.choice(NUM_DEV, n, replace=False)
+        mu = unfused.run_round(0, ids, r)
+        mf = fused.run_round(0, ids, r)
+        assert abs(mu["accuracy"] - mf["accuracy"]) < 1e-4, (r, mu, mf)
+        assert abs(mu["loss"] - mf["loss"]) < 1e-3, (r, mu, mf)
+
+
+def test_fused_cross_job_batched_lane():
+    """Two jobs sharing a model config stack onto one lane; begin_round +
+    run_round must batch them and still match per-job unfused training."""
+    jobs, datasets = _setup(num_jobs=2)
+    fused = FusedMultiRuntime(jobs, datasets, seed=0)
+    assert len(fused.groups) == 1 and len(fused.groups[0].job_ids) == 2
+    unfused = [FLJobRuntime(j, *d, seed=j.job_id)
+               for j, d in zip(jobs, datasets)]
+    rng = np.random.default_rng(2)
+    for r in range(4):
+        cohorts = [rng.choice(NUM_DEV, int(rng.integers(3, 7)), replace=False)
+                   for _ in jobs]
+        # engine-style: both in-flight rounds announced before any demand
+        for j, ids in enumerate(cohorts):
+            fused.begin_round(j, ids, r)
+        for j, ids in enumerate(cohorts):
+            mf = fused.run_round(j, ids, r)
+            mu = unfused[j].run_round(j, ids, r)
+            assert abs(mu["accuracy"] - mf["accuracy"]) < 1e-4, (j, r)
+
+
+def test_compile_stability_bounded_by_buckets():
+    """20 rounds of jittery cohort sizes must compile at most len(buckets)
+    variants of the fused step (probed via the jit cache)."""
+    jobs, datasets = _setup(seed=7)
+    fused = FusedMultiRuntime(jobs, datasets, seed=0, buckets=(4, 8, 16, 20))
+    before = _fused_group_round._cache_size()
+    rng = np.random.default_rng(3)
+    for r in range(20):
+        n = int(rng.integers(1, NUM_DEV + 1))  # every cohort size in play
+        ids = rng.choice(NUM_DEV, n, replace=False)
+        fused.run_round(0, ids, r)
+    compiles = _fused_group_round._cache_size() - before
+    assert compiles <= len(fused.buckets), (compiles, fused.buckets)
+    # the unfused batch trainer would have compiled once per DISTINCT size;
+    # sanity-check the bound is actually tighter than that here
+    assert compiles < 20
+
+    # eval_every > 1 puts both step variants (eval / no-eval) in play:
+    # the bound doubles but stays bucket-shaped, not cohort-size-shaped.
+    jobs2, datasets2 = _setup(seed=8)
+    fused2 = FusedMultiRuntime(jobs2, datasets2, seed=0,
+                               buckets=(4, 8, 16, 20), eval_every=3)
+    before2 = _fused_group_round._cache_size()
+    for r in range(20):
+        n = int(rng.integers(1, NUM_DEV + 1))
+        fused2.run_round(0, rng.choice(NUM_DEV, n, replace=False), r)
+    compiles2 = _fused_group_round._cache_size() - before2
+    assert compiles2 <= 2 * len(fused2.buckets), (compiles2, fused2.buckets)
+
+
+def test_eval_every_skips_and_reports_stale_metrics():
+    jobs, datasets = _setup(seed=11)
+    fused = FusedMultiRuntime(jobs, datasets, seed=0, eval_every=3)
+    rng = np.random.default_rng(4)
+    metrics = [fused.run_round(0, rng.choice(NUM_DEV, 5, replace=False), r)
+               for r in range(7)]
+    # rounds 1, 2 reuse round 0's eval; rounds 4, 5 reuse round 3's
+    assert metrics[0] == metrics[1] == metrics[2]
+    assert metrics[3] == metrics[4] == metrics[5]
+    assert metrics[3] != metrics[0]
+    assert metrics[6] != metrics[3]
+
+
+def test_unfused_runtime_weights_by_partition_size():
+    """FedAvg must weight devices by their REAL partition sizes, not
+    uniformly."""
+    jobs, datasets = _setup(seed=13)
+    x, y, part, ex, ey = datasets[0]
+    sizes = np.full(NUM_DEV, part.shape[1], dtype=np.float64)
+    sizes[:NUM_DEV // 2] = part.shape[1] // 3  # half the pool holds less data
+    rt = FLJobRuntime(jobs[0], x, y, part, ex, ey, seed=0,
+                      partition_sizes=sizes)
+    ids = np.asarray([1, 4, 15, 18])  # two small, two full devices
+    params0 = jax.tree_util.tree_map(jnp.copy, rt.params)
+    rt.run_round(0, ids, 0)
+    locals_ = _local_train_batch(
+        params0, rt.cfg, rt.x[jnp.asarray(part[ids])],
+        rt.y[jnp.asarray(part[ids])], jobs[0].local_epochs,
+        jobs[0].batch_size, jobs[0].lr)
+    expected = fedavg(locals_, jnp.asarray(sizes[ids], jnp.float32))
+    uniform = fedavg(locals_, jnp.ones(len(ids), jnp.float32))
+    got = jax.tree_util.tree_leaves(rt.params)
+    exp = jax.tree_util.tree_leaves(expected)
+    uni = jax.tree_util.tree_leaves(uniform)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), atol=1e-6)
+    assert any(not np.allclose(np.asarray(g), np.asarray(u), atol=1e-6)
+               for g, u in zip(got, uni))
+
+
+def test_engine_announces_realized_cohort_at_launch():
+    """The engine must call begin_round at LAUNCH with the same survivor
+    cohort it later passes to run_round at the finish event."""
+    from repro.core.cost import CostModel
+    from repro.core.devices import DevicePool
+    from repro.core.multijob import MultiJobEngine
+    from repro.core.schedulers.random_sched import RandomScheduler
+
+    calls = {"begin": [], "run": []}
+
+    class Recorder:
+        def begin_round(self, job_id, device_ids, round_idx):
+            calls["begin"].append((job_id, round_idx, tuple(device_ids)))
+
+        def run_round(self, job_id, device_ids, round_idx):
+            calls["run"].append((job_id, round_idx, tuple(device_ids)))
+            return {"loss": 1.0, "accuracy": 0.0}
+
+    pool = DevicePool.heterogeneous(12, 1, seed=0)
+    jobs = [dataclasses.replace(
+        JobConfig(job_id=0, model=_tiny_cfg(), target_metric=0.9),
+        max_rounds=4)]
+    cm = CostModel(pool)
+    eng = MultiJobEngine(jobs, pool, cm, RandomScheduler(cost_model=cm, seed=0),
+                        Recorder(), n_sel=3, over_provision=1.5,
+                        failure_rate=0.2, rng=np.random.default_rng(0))
+    eng.run()
+    assert len(calls["begin"]) == len(calls["run"]) == 4
+    assert calls["begin"] == calls["run"]  # same cohorts, announced earlier
+
+
+def test_fused_runtime_rejects_bad_args():
+    jobs, datasets = _setup()
+    with pytest.raises(ValueError):
+        FusedMultiRuntime(jobs, [], seed=0)
+    with pytest.raises(ValueError):
+        FusedMultiRuntime(jobs, datasets, eval_every=0)
+    with pytest.raises(ValueError):
+        FLJobRuntime(jobs[0], *datasets[0],
+                     partition_sizes=np.ones(NUM_DEV + 1))
