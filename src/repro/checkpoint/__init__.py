@@ -2,8 +2,11 @@
 
 from repro.checkpoint.checkpoint import (
     CheckpointManager,
+    committed_steps,
     load_checkpoint,
     save_checkpoint,
+    step_path,
 )
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "committed_steps", "load_checkpoint",
+           "save_checkpoint", "step_path"]

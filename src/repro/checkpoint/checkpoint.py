@@ -65,7 +65,7 @@ def _flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
 def save_checkpoint(directory: str, step: int, tree: PyTree,
                     extra: Optional[Dict[str, Any]] = None) -> str:
     os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:010d}")
+    final = step_path(directory, step)
     tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory)
     try:
         flat, _ = _flatten_with_paths(tree)
@@ -92,7 +92,15 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
         raise
 
 
-def _committed_steps(directory: str) -> List[int]:
+def step_path(directory: str, step: int) -> str:
+    """Canonical on-disk location of one step — the single definition of
+    the layout (consumers like ``repro.gym.zoo`` must not re-derive it)."""
+    return os.path.join(directory, f"step_{step:010d}")
+
+
+def committed_steps(directory: str) -> List[int]:
+    """Steps with a commit marker (fully written), ascending. Public so
+    layered stores (the policy zoo) share one notion of 'committed'."""
     if not os.path.isdir(directory):
         return []
     steps = []
@@ -101,6 +109,9 @@ def _committed_steps(directory: str) -> List[int]:
                 os.path.join(directory, name, _MARKER)):
             steps.append(int(name.split("_")[1]))
     return sorted(steps)
+
+
+_committed_steps = committed_steps
 
 
 def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
@@ -113,7 +124,7 @@ def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
     if not steps:
         raise FileNotFoundError(f"no committed checkpoints in {directory}")
     step = steps[-1] if step is None else step
-    path = os.path.join(directory, f"step_{step:010d}")
+    path = step_path(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -149,7 +160,7 @@ class CheckpointManager:
     def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
         path = save_checkpoint(self.directory, step, tree, extra)
         for s in _committed_steps(self.directory)[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+            shutil.rmtree(step_path(self.directory, s),
                           ignore_errors=True)
         return path
 

@@ -130,6 +130,35 @@ class BODSScheduler(SchedulerBase):
         self._head = np.zeros(M, dtype=int)
         self._initialized = np.zeros(M, dtype=bool)
 
+    # ---- persistence (policy zoo) ----
+
+    def state_dict(self):
+        """The GP observation rings as a checkpointable pytree (the policy
+        zoo saves/loads them bit-exactly; a restored BODS resumes with its
+        full observation history instead of re-bootstrapping)."""
+        return {"F": self._F, "plans": self._plans, "y": self._y,
+                "est": self._est, "valid": self._valid, "head": self._head,
+                "initialized": self._initialized}
+
+    def load_state_dict(self, tree) -> None:
+        F = np.asarray(tree["F"], np.float32)
+        plans = np.asarray(tree["plans"], bool)
+        # The plans ring carries K, the F ring carries M — both must match
+        # (a ring saved on a different pool would broadcast-crash later).
+        if F.shape != self._F.shape or plans.shape != self._plans.shape:
+            raise ValueError(
+                f"BODS observation ring shapes {F.shape}/{plans.shape} do "
+                f"not match this pool/job mix "
+                f"{self._F.shape}/{self._plans.shape}; BODS state is "
+                "pool-specific")
+        self._F = F
+        self._plans = plans
+        self._y = np.asarray(tree["y"], np.float32)
+        self._est = np.asarray(tree["est"], np.float32)
+        self._valid = np.asarray(tree["valid"], np.float32)
+        self._head = np.asarray(tree["head"], int)
+        self._initialized = np.asarray(tree["initialized"], bool)
+
     # ---- plan featurization φ(V) ----
 
     def _featurize(self, ctx: SchedulingContext, plans: np.ndarray) -> np.ndarray:

@@ -68,6 +68,24 @@ class DNNScheduler(SchedulerBase):
         self._valid = np.zeros(BUF, np.float32)
         self._head = 0
 
+    # ---- persistence (policy zoo) ----
+
+    def state_dict(self):
+        return {"params": self.params, "F": self._F, "y": self._y,
+                "valid": self._valid, "head": np.asarray(self._head, np.int64)}
+
+    def load_state_dict(self, tree) -> None:
+        F = np.asarray(tree["F"], np.float32)
+        if F.shape != self._F.shape:
+            raise ValueError(
+                f"DNN replay-ring shape {F.shape} does not match this "
+                f"scheduler's {self._F.shape} (BUF/feature-count mismatch)")
+        self.params = jax.tree_util.tree_map(jnp.asarray, tree["params"])
+        self._F = F
+        self._y = np.asarray(tree["y"], np.float32)
+        self._valid = np.asarray(tree["valid"], np.float32)
+        self._head = int(np.asarray(tree["head"]))
+
     def _featurize(self, ctx, plans):
         from repro.core.schedulers.bods import BODSScheduler
         return BODSScheduler._featurize(self, ctx, plans)  # shared feature map

@@ -10,10 +10,17 @@ Training is REINFORCE (paper Formula 12) with an EMA baseline b_m per job:
 with reward R = -TotalCost. The policy is shared across jobs ("learns the
 sharing relationship of devices among diverse jobs"); per-device features:
 [a_k, μ_k, E[t_k] (job-specific), fairness count s_{k,m}, availability,
-D_k^m]. Pre-training (paper Algorithm 3) runs at construction against the
-estimated cost model with N plans per synthetic round.
+D_k^m]. Pre-training (paper Algorithm 3) runs LAZILY at the first
+``schedule()`` call against the estimated cost model with N plans per
+synthetic round — or not at all when a gym-trained policy is warm-started
+via ``load_state_dict`` / the ExperimentSpec ``policy`` axis (the scalable
+replacement: ``repro.gym.train`` runs batched REINFORCE over vectorized
+environments instead of this sequential Python loop).
 
 All policy math is jitted JAX; the LSTM is a lax.scan over the K devices.
+All randomness that feeds JAX code is threaded through explicit
+``jax.random`` keys (``init_policy``); the numpy Generator is only used for
+the host-side ε-greedy/plan-repair sampling.
 """
 
 from __future__ import annotations
@@ -34,33 +41,56 @@ NUM_FEATURES = 6
 HIDDEN = 64
 
 
-def _init_policy(rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
-    def glorot(shape):
+def policy_optimizer(lr: float):
+    """The RLDS policy optimizer — ONE definition shared by the live
+    scheduler, the gym trainer, and the policy zoo's warm-start wrapper,
+    so saved optimizer moments always match the online settings. (Named
+    distinctly from ``repro.optim.make_optimizer``, which takes an
+    ``OptimizerConfig``.)"""
+    return adamw(lr, 0.9, 0.999, 1e-8, 0.0)
+
+
+def init_policy(key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Glorot-init policy params from an explicit ``jax.random`` key.
+
+    The one PRNG entry point shared by the constructor (which derives its
+    key from ``seed``) and the gym trainer's fully key-threaded path.
+    """
+    ks = jax.random.split(key, 3)
+
+    def glorot(k, shape):
         fan = sum(shape)
-        return jnp.asarray(rng.normal(0, np.sqrt(2.0 / fan), shape), jnp.float32)
+        return jax.random.normal(k, shape, jnp.float32) * np.sqrt(2.0 / fan)
 
     return {
-        "wi": glorot((NUM_FEATURES, 4 * HIDDEN)),   # input -> gates
-        "wh": glorot((HIDDEN, 4 * HIDDEN)),          # hidden -> gates
+        "wi": glorot(ks[0], (NUM_FEATURES, 4 * HIDDEN)),   # input -> gates
+        "wh": glorot(ks[1], (HIDDEN, 4 * HIDDEN)),          # hidden -> gates
         "b": jnp.zeros((4 * HIDDEN,), jnp.float32),
-        "w_out": glorot((HIDDEN, 1)),
+        "w_out": glorot(ks[2], (HIDDEN, 1)),
         "b_out": jnp.zeros((1,), jnp.float32),
     }
 
 
 def _policy_logits(params, feats):
-    """feats: (K, F) -> logits (K,). LSTM scan over the device sequence."""
+    """feats: (K, F) -> logits (K,). LSTM scan over the device sequence.
 
-    def cell(carry, x):
+    The input projection has no recurrent dependency, so it is hoisted out
+    of the scan as one (K, F) @ (F, 4H) matmul — inside the scan only the
+    hidden-to-gates matvec remains (matters for gym rollout throughput,
+    where this scan is the inner loop of E*T vectorized policy calls).
+    """
+    xw = feats @ params["wi"] + params["b"]      # (K, 4H), scan-invariant
+
+    def cell(carry, xw_t):
         h, c = carry
-        gates = x @ params["wi"] + h @ params["wh"] + params["b"]
+        gates = xw_t + h @ params["wh"]
         i, f, g, o = jnp.split(gates, 4, axis=-1)
         c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
         return (h, c), h
 
     h0 = jnp.zeros((HIDDEN,), jnp.float32)
-    (_, _), hs = jax.lax.scan(cell, (h0, h0), feats)
+    (_, _), hs = jax.lax.scan(cell, (h0, h0), xw)
     return (hs @ params["w_out"] + params["b_out"])[:, 0]
 
 
@@ -107,14 +137,53 @@ class RLDSScheduler(SchedulerBase):
         super().__init__(cost_model, seed)
         self.epsilon = epsilon
         self.gamma = gamma  # EMA factor for the baseline b_m (paper Line 7)
-        self.params = _init_policy(self.rng)
-        self._opt_init, self._opt_update = adamw(lr, 0.9, 0.999, 1e-8, 0.0)
+        self.params = init_policy(jax.random.PRNGKey(seed))
+        self._opt_init, self._opt_update = policy_optimizer(lr)
         self.opt_state = self._opt_init(self.params)
         # Baselines b_m start unset; the first observed reward initializes them
         # (a zero init against rewards ≈ -cost << 0 yields huge early advantages).
         self.baselines = np.full(cost_model.pool.num_jobs, np.nan)
         self._adv_scale = 1.0  # running |advantage| normalizer
-        self._pretrain(pretrain_rounds, pretrain_plans)
+        # Pre-training is LAZY: construction is O(1); the Algorithm-3 loop
+        # runs at the first schedule() unless a warm start arrives first
+        # (load_state_dict) or pretrain_rounds == 0.
+        self._pretrain_cfg = (pretrain_rounds, pretrain_plans)
+        self._pretrained = pretrain_rounds <= 0
+
+    # ---- persistence (policy zoo) ----
+
+    def state_dict(self) -> Dict:
+        """Full learner state as a checkpointable pytree (bit-exact restore
+        via ``repro.gym.zoo.PolicyZoo``)."""
+        return {
+            "params": self.params,
+            "opt": self.opt_state,
+            "baselines": np.asarray(self.baselines, np.float64),
+            "adv_scale": np.asarray(self._adv_scale, np.float64),
+            "pretrained": np.asarray(self._pretrained),
+        }
+
+    def load_state_dict(self, tree: Dict) -> None:
+        """Warm-start from a saved/gym-trained state. The pretrained flag
+        rides in the state: a trained snapshot skips the lazy Algorithm-3
+        loop entirely, while a snapshot taken BEFORE any training (fresh
+        constructor state) still pre-trains at first schedule()."""
+        params = jax.tree_util.tree_map(jnp.asarray, tree["params"])
+        saved = jax.tree_util.tree_map(lambda p: p.shape, params)
+        own = jax.tree_util.tree_map(lambda p: p.shape, self.params)
+        if saved != own:
+            raise ValueError(
+                f"RLDS policy shapes {saved} do not match this build's "
+                f"{own} (NUM_FEATURES/HIDDEN mismatch)")
+        self.params = params
+        self.opt_state = tree["opt"]
+        baselines = np.asarray(tree["baselines"], np.float64)
+        # Policies are portable across job mixes: a baseline vector saved
+        # for a different M resets to unset (first reward re-initializes).
+        M = self.cost_model.pool.num_jobs
+        self.baselines = baselines if baselines.shape == (M,) else np.full(M, np.nan)
+        self._adv_scale = float(np.asarray(tree["adv_scale"]))
+        self._pretrained = bool(np.asarray(tree["pretrained"]))
 
     # ---- features ----
 
@@ -167,6 +236,11 @@ class RLDSScheduler(SchedulerBase):
     # ---- Algorithm 2 ----
 
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        if not self._pretrained:
+            # Flag set only after _pretrain RETURNS: an exception mid-loop
+            # (caller catches and retries) must not skip pre-training.
+            self._pretrain(*self._pretrain_cfg)
+            self._pretrained = True
         feats = self._features(ctx)
         probs = np.asarray(_probs(self.params, jnp.asarray(feats)))
         # Annealed ε-greedy: exploration is front-loaded; late-round random

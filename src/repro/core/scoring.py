@@ -177,6 +177,26 @@ def _jax_round_time_fn():
     return round_time
 
 
+# ---- traced-callable accessors (the gym's in-graph scoring path) --------
+#
+# The public API below is host-facing (numpy in/out). The scheduler gym
+# (``repro.gym``) evaluates Formula 2/3 INSIDE its own jit/vmap/scan graphs,
+# so it needs the underlying jitted callables directly: jax.Array in,
+# jax.Array out, safe to call from traced code (an inner jit is inlined).
+# Conventions match the wrappers: ``counts_c`` is mean-centered float32
+# (variance is shift-invariant; centering keeps f32 cancellation-free),
+# plans are (P, K) with nonzero = selected.
+
+def jax_fairness_fn(delta_fairness: bool = False):
+    """(counts_c, plans) -> (P,) Formula-5 fairness (or its increment)."""
+    return _jax_fairness_fn(bool(delta_fairness))
+
+
+def jax_round_time_fn():
+    """(times, plans) -> (P,) Formula-3 round time (masked max, empty -> 0)."""
+    return _jax_round_time_fn()
+
+
 # ---- numpy reference (the seed semantics, bit-for-bit) ------------------
 
 def _score_numpy(times, counts, plans, alpha, beta, ts, fs, delta_fairness):

@@ -7,8 +7,10 @@
 
 ``preset --arg k=v`` feeds the preset factory (values parsed as JSON, bare
 strings allowed); ``--set k=v`` overrides top-level ExperimentSpec fields on
-the materialized spec. A saved result's ``spec`` block is itself a valid
-input to ``run`` — benchmark outputs are replayable.
+the materialized spec — including the policy axis (``--set policy=<name>``
+loads a gym-trained scheduler policy from the zoo; train one with
+``python -m repro.gym train``). A saved result's ``spec`` block is itself a
+valid input to ``run`` — benchmark outputs are replayable.
 """
 
 from __future__ import annotations
@@ -84,6 +86,13 @@ def cmd_list(args) -> None:
     print("schedulers:", ", ".join(SCHEDULERS.names()))
     print("runtimes:  ", ", ".join(RUNTIMES.names()))
     print("presets:   ", ", ".join(list_presets()))
+    # Trained policies usable via the spec's `policy` axis (repro.gym.zoo).
+    from repro.gym.zoo import DEFAULT_ZOO_DIR, PolicyZoo
+
+    names = PolicyZoo(DEFAULT_ZOO_DIR).names()
+    if names:
+        print("policies:  ", ", ".join(names),
+              f"(--set policy=<name>, zoo dir {DEFAULT_ZOO_DIR!r})")
 
 
 def main(argv=None) -> None:

@@ -130,6 +130,22 @@ def fleet_scale(scheduler: str = "bods", num_devices: int = 10_000,
         runtime_kwargs={"seed": 2})
 
 
+@register_preset("rlds-warmstart")
+def rlds_warmstart(policy: str = "rlds-default",
+                   policy_dir: str = "policies", n_jobs: int = 3,
+                   num_devices: int = 100, max_rounds: int = 150,
+                   seed: int = 1) -> ExperimentSpec:
+    """Quickstart scenario driven by a gym-trained RLDS policy loaded from
+    the policy zoo (train one first: ``python -m repro.gym train --name
+    rlds-default``). Construction skips the legacy 300-round constructor
+    pre-training entirely — the warm start replaces it."""
+    spec = quickstart(scheduler="rlds", n_jobs=n_jobs,
+                      num_devices=num_devices, max_rounds=max_rounds,
+                      seed=seed)
+    return spec.replace(name=f"rlds-warmstart-{policy}", policy=policy,
+                        policy_dir=policy_dir)
+
+
 @register_preset("fault-injection")
 def fault_injection(scheduler: str = "bods", failure_rate: float = 0.2,
                     failure_cooldown: float = 100.0,

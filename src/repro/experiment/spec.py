@@ -5,7 +5,9 @@ federated-learning experiment: the jobs, the device pool, the cost-model
 coefficients, the scheduler (by registry name), the runtime (``synthetic``
 closed-form convergence or ``real_fl`` actual JAX training), the training
 execution knobs (``TrainSpec``: fused engine, cohort buckets, eval cadence),
-and the fault/straggler/queueing knobs of the engine. ``spec.build()`` wires the
+the fault/straggler/queueing knobs of the engine, and the ``policy`` axis
+(a policy-zoo entry name that warm-starts the scheduler — e.g. a gym-trained
+RLDS policy from ``repro.gym``). ``spec.build()`` wires the
 ``DevicePool -> CostModel -> calibrate -> scheduler -> runtime ->
 MultiJobEngine`` chain that every example/benchmark/test used to assemble by
 hand; ``spec.run()`` executes it and returns an ``ExperimentResult`` whose
@@ -181,6 +183,13 @@ class ExperimentSpec:
     runtime: str = "synthetic"
     runtime_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     train: TrainSpec = TrainSpec()
+    # Policy axis: name of a policy-zoo entry (``repro.gym.zoo``) to load
+    # into the scheduler after construction — e.g. a gym-trained RLDS
+    # policy, a saved BODS observation ring. A loaded policy ALWAYS
+    # replaces RLDS's lazy Algorithm-3 pre-training (``load_state_dict``
+    # marks the policy pre-trained).
+    policy: Optional[str] = None
+    policy_dir: str = "policies"
     non_iid: bool = True            # data distribution (both runtime kinds)
     n_sel: Optional[int] = None     # devices per round; None -> 10% of pool
     # Engine knobs: faults, stragglers, queueing-aware release horizon.
@@ -234,10 +243,20 @@ class ExperimentSpec:
             pool, [float(j.local_epochs) for j in jobs], n_sel,
             scoring_backend=self.effective_scoring_backend())
         # scheduler_kwargs may override the default seed/cost_model wiring
-        scheduler = SCHEDULERS.create(self.scheduler, **{
+        sched_kwargs = {
             "cost_model": cost_model, "seed": self.scheduler_seed,
             **self._candidate_kwargs(),
-            **dict(self.scheduler_kwargs)})
+            **dict(self.scheduler_kwargs)}
+        if self.policy and self.scheduler == "rlds":
+            # The warm start replaces the lazy Algorithm-3 pre-training
+            # (load_state_dict marks the policy pre-trained regardless);
+            # zeroing the knob just keeps the constructor contract obvious.
+            sched_kwargs.setdefault("pretrain_rounds", 0)
+        scheduler = SCHEDULERS.create(self.scheduler, **sched_kwargs)
+        if self.policy:
+            from repro.gym.zoo import PolicyZoo
+
+            PolicyZoo(self.policy_dir).load_into(self.policy, scheduler)
         runtime = RUNTIMES.get(self.runtime)(
             self, jobs, pool, **dict(self.runtime_kwargs))
         engine = MultiJobEngine(

@@ -1,0 +1,61 @@
+"""Scheduler gym: vectorized pure-JAX training environments, the REINFORCE
+trainer that replaces RLDS constructor pre-training, and the policy zoo.
+
+    from repro.gym import EnvConfig, train_rlds, default_stages, PolicyZoo
+
+    params, logs = train_rlds(default_stages("full", num_devices=(64, 256)))
+    zoo = PolicyZoo("policies")
+    save_rlds_params(zoo, "rlds-full", params, num_jobs=3)
+    # then: ExperimentSpec(..., scheduler="rlds", policy="rlds-full")
+
+Shell entry point: ``python -m repro.gym train|eval|list``.
+"""
+
+from repro.gym.env import (
+    EnvConfig,
+    EnvState,
+    StepOut,
+    Transition,
+    batch_reset,
+    batch_rollout,
+    config_from_cost_model,
+    greedy_plan,
+    policy_rollout,
+    reset,
+    sample_plan,
+    state_from_pool,
+    step,
+)
+from repro.gym.scenarios import CURRICULA, ScenarioSpec
+from repro.gym.train import (
+    TrainConfig,
+    default_stages,
+    evaluate,
+    train_rlds,
+)
+from repro.gym.zoo import DEFAULT_ZOO_DIR, PolicyZoo, save_rlds_params
+
+__all__ = [
+    "CURRICULA",
+    "DEFAULT_ZOO_DIR",
+    "EnvConfig",
+    "EnvState",
+    "PolicyZoo",
+    "ScenarioSpec",
+    "StepOut",
+    "TrainConfig",
+    "Transition",
+    "batch_reset",
+    "batch_rollout",
+    "config_from_cost_model",
+    "default_stages",
+    "evaluate",
+    "greedy_plan",
+    "policy_rollout",
+    "reset",
+    "sample_plan",
+    "save_rlds_params",
+    "state_from_pool",
+    "step",
+    "train_rlds",
+]

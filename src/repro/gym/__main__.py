@@ -1,0 +1,7 @@
+"""``python -m repro.gym`` -> the gym CLI."""
+
+import sys
+
+from repro.gym.cli import main
+
+main(sys.argv[1:])

@@ -1,0 +1,442 @@
+"""Vectorized pure-JAX multi-job scheduling environment (the scheduler gym).
+
+The live ``MultiJobEngine`` is an event-driven Python loop — correct, but
+useless for training learned schedulers at scale: RLDS pre-training needs
+millions of scheduling decisions over DIVERSE scenarios, and a Python
+round loop delivers thousands. This module is the trainable mirror of the
+engine: the whole environment state lives in jnp arrays, ``reset``/``step``
+are pure functions, rollouts are a ``lax.scan`` over rounds, and E parallel
+environments with independently randomized scenarios run under one ``vmap``.
+
+Semantics mirror ``repro.core.multijob.MultiJobEngine`` (parity-tested in
+tests/test_gym.py):
+
+- **Time model** — Formula 4 shifted-exponential realized times, identical
+  coefficients to ``DevicePool`` (``t = tau*D*a + Exp(tau*D/mu)``); like the
+  pool's SoA fast path, the per-job shift/scale products are materialized
+  ONCE at reset so the per-step work is one fused multiply-add.
+- **Occupancy** — each scheduled device is busy until ITS OWN finish time;
+  a job launches its next round at ``max(own release instant, instant at
+  which n_sel devices are free)`` — exactly the engine's retry-until-release
+  behaviour, computed in closed form via a top-k over ``busy_until``.
+- **Faults** — each scheduled device drops with ``failure_rate``; survivors
+  define the round time, failed devices are quarantined for
+  ``failure_cooldown`` and excluded from the fairness-count update, and the
+  engine's keep-one guard applies when everyone fails.
+- **Cost** — Formula 2/3 evaluated through the SAME jitted reductions the
+  scoring core uses everywhere else (``repro.core.scoring.jax_*_fn``):
+  realized straggler max + fairness-variance increment, normalized by the
+  calibrated time/fairness scales.
+
+Jobs are scheduled round-robin (the engine interleaves by completion
+events; round-robin is the synchronous projection of that order and keeps
+the scan shape static). Per-device policy features mirror
+``RLDSScheduler._features`` field for field, so a gym-trained policy drops
+into the live scheduler unchanged.
+
+All randomness is explicit ``jax.random`` key splitting carried in the
+state — no numpy Generators anywhere in the rollout path. Rollouts
+pre-draw the whole trajectory's noise in three bulk calls (exponential
+jitter, fault uniforms, Gumbel exploration) instead of 3T scan-interleaved
+threefry dispatches — on CPU this alone is worth ~2x env throughput.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scoring
+from repro.gym.scenarios import ScenarioSpec, sample_scenario
+
+
+class EnvConfig(NamedTuple):
+    """Static (hashable) environment shape/coefficients — safe as a jit
+    static argument; everything per-scenario lives in ``EnvState``."""
+
+    num_devices: int = 64
+    num_jobs: int = 3
+    n_sel: int = 6
+    alpha: float = 4.0
+    beta: float = 0.25
+    # Cost fairness form, mirroring CostModel.delta_fairness: True uses the
+    # per-round increment Var(c+v) - Var(c), False the absolute Formula-5
+    # variance (the engine honors the same flag in its realized cost).
+    delta_fairness: bool = True
+    failure_cooldown: float = 60.0
+
+
+class Scenario(NamedTuple):
+    """Per-episode coefficients, drawn at reset and fixed until the next.
+
+    Beyond the raw Formula-4 parameters, the scenario carries the
+    derived arrays every step would otherwise recompute (mirroring
+    ``DevicePool``'s structure-of-arrays fast path): per-job realized-time
+    ``shift``/``scale``, per-job expected times ``exp_base``, and the
+    max-normalized static policy features.
+    """
+
+    a: jax.Array               # (K,) capability floor
+    mu: jax.Array              # (K,) fluctuation rate
+    data: jax.Array            # (K, M) per-job data sizes
+    taus: jax.Array            # (M,) local epochs (job mix)
+    failure_rate: jax.Array    # () per-device drop probability
+    time_scale: jax.Array      # () calibrated Formula-2 normalizers
+    fairness_scale: jax.Array  # ()
+    shift: jax.Array           # (M, K) tau*D*a   (realized-time floor)
+    scale: jax.Array           # (M, K) tau*D/mu  (exponential scale)
+    exp_base: jax.Array        # (M, K) expected times tau*D*(a + 1/mu)
+    a_norm: jax.Array          # (K,) a / max(a)        (policy features)
+    mu_norm: jax.Array         # (K,) mu / max(mu)
+    data_norm: jax.Array       # (K, M) D / max(D)
+
+
+class EnvState(NamedTuple):
+    """One environment: scenario + dynamic clocks/counters."""
+
+    scen: Scenario
+    busy_until: jax.Array      # (K,) occupancy clocks
+    counts: jax.Array          # (M, K) fairness counters s_{k,m}
+    round_idx: jax.Array       # (M,) per-job round indices
+    job_clock: jax.Array       # (M,) per-job release instants
+    job: jax.Array             # () job scheduled at the next step
+    t: jax.Array               # () global step counter
+    key: jax.Array             # PRNG key (explicit jax.random threading)
+
+
+class StepOut(NamedTuple):
+    """Per-step outcome (the quantities the engine records per round)."""
+
+    cost: jax.Array        # realized Formula-2 cost (delta fairness)
+    round_time: jax.Array  # realized Formula-3 straggler max
+    fairness: jax.Array    # absolute Formula-5 variance (recorded form)
+    dfair: jax.Array       # fairness increment used in the cost
+    reward: jax.Array      # -cost (the RLDS reward)
+    job: jax.Array         # job index that was scheduled
+    now: jax.Array         # launch instant
+
+
+class Transition(NamedTuple):
+    """What a policy rollout collects per step (REINFORCE ingredients)."""
+
+    feats: jax.Array      # (K, F) policy features
+    plan: jax.Array       # (K,) bool
+    available: jax.Array  # (K,) bool
+    reward: jax.Array
+    cost: jax.Array
+    round_time: jax.Array
+    job: jax.Array
+
+
+# ---- reset ---------------------------------------------------------------
+
+def calibrate_scales(cfg: EnvConfig, exp_base: jax.Array):
+    """Mirror ``CostModel.calibrate``: time_scale = median over jobs of the
+    median of the n_sel smallest expected times; fairness_scale = p(1-p)."""
+    fastest = jnp.sort(exp_base, axis=1)[:, : cfg.n_sel]
+    time_scale = jnp.maximum(jnp.median(jnp.median(fastest, axis=1)), 1e-9)
+    p = cfg.n_sel / cfg.num_devices
+    fairness_scale = jnp.asarray(max(p * (1.0 - p), 1e-6), jnp.float32)
+    return time_scale.astype(jnp.float32), fairness_scale
+
+
+def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
+                  time_scale=None, fairness_scale=None) -> Scenario:
+    """Materialize the derived per-job arrays (SoA fast path) and calibrate
+    the cost normalizers (unless given, e.g. from a live CostModel — then
+    ``cfg`` may be None)."""
+    f32 = jnp.float32
+    a = jnp.asarray(a, f32)
+    mu = jnp.asarray(mu, f32)
+    data = jnp.asarray(data, f32)
+    taus = jnp.asarray(taus, f32)
+    d_t = data.T                                    # (M, K)
+    shift = taus[:, None] * d_t * a[None, :]
+    scale = taus[:, None] * d_t / mu[None, :]
+    exp_base = shift + scale                        # tau*D*(a + 1/mu)
+    if time_scale is None or fairness_scale is None:
+        time_scale, fairness_scale = calibrate_scales(cfg, exp_base)
+    return Scenario(
+        a=a, mu=mu, data=data, taus=taus,
+        failure_rate=jnp.asarray(failure_rate, f32),
+        time_scale=jnp.asarray(time_scale, f32),
+        fairness_scale=jnp.asarray(fairness_scale, f32),
+        shift=shift, scale=scale, exp_base=exp_base,
+        a_norm=a / jnp.max(a), mu_norm=mu / jnp.max(mu),
+        data_norm=data / jnp.max(data))
+
+
+def _zero_dynamics(cfg: EnvConfig, scen: Scenario, key: jax.Array) -> EnvState:
+    K, M = cfg.num_devices, cfg.num_jobs
+    return EnvState(
+        scen=scen,
+        busy_until=jnp.zeros(K, jnp.float32),
+        counts=jnp.zeros((M, K), jnp.float32),
+        round_idx=jnp.zeros(M, jnp.int32),
+        job_clock=jnp.zeros(M, jnp.float32),
+        job=jnp.zeros((), jnp.int32),
+        t=jnp.zeros((), jnp.int32),
+        key=key)
+
+
+def reset(cfg: EnvConfig, scen_spec: ScenarioSpec, key: jax.Array) -> EnvState:
+    """Draw a fresh randomized scenario and zero the dynamic state."""
+    k_scen, k_env = jax.random.split(key)
+    a, mu, data, taus, failure_rate = sample_scenario(
+        k_scen, scen_spec, cfg.num_devices, cfg.num_jobs)
+    scen = make_scenario(cfg, a, mu, data, taus, failure_rate)
+    return _zero_dynamics(cfg, scen, k_env)
+
+
+def batch_reset(cfg: EnvConfig, scen_spec: ScenarioSpec, key: jax.Array,
+                num_envs: int) -> EnvState:
+    """(E,)-batched reset: E independent scenarios under one vmap."""
+    return jax.vmap(lambda k: reset(cfg, scen_spec, k))(
+        jax.random.split(key, num_envs))
+
+
+def state_from_pool(pool, cost_model, taus: Sequence[float],
+                    failure_rate: float = 0.0,
+                    key: Optional[jax.Array] = None) -> EnvState:
+    """EnvState mirroring a CONCRETE ``DevicePool`` + calibrated
+    ``CostModel`` — the bridge for engine-parity tests and for training a
+    policy against the exact scenario an ``ExperimentSpec`` will run."""
+    K, M = pool.num_devices, pool.num_jobs
+    assert len(taus) == M, (len(taus), M)
+    scen = make_scenario(None, pool.a, pool.mu, pool.data_sizes, taus,
+                         failure_rate, time_scale=cost_model.time_scale,
+                         fairness_scale=cost_model.fairness_scale)
+    return _zero_dynamics(config_from_cost_model(cost_model, n_sel=1), scen,
+                          jax.random.PRNGKey(0) if key is None else key)
+
+
+def config_from_cost_model(cost_model, n_sel: int,
+                           failure_cooldown: float = 60.0) -> EnvConfig:
+    """EnvConfig matching a live CostModel's pool and coefficients; pass
+    the engine's ``failure_cooldown`` so quarantine dynamics match too."""
+    return EnvConfig(num_devices=cost_model.pool.num_devices,
+                     num_jobs=cost_model.pool.num_jobs, n_sel=n_sel,
+                     alpha=float(cost_model.alpha),
+                     beta=float(cost_model.beta),
+                     delta_fairness=bool(cost_model.delta_fairness),
+                     failure_cooldown=float(failure_cooldown))
+
+
+# ---- step ----------------------------------------------------------------
+
+def release_instant(cfg: EnvConfig, state: EnvState) -> jax.Array:
+    """Engine retry semantics in closed form: the job launches at
+    ``max(its own release instant, the instant n_sel devices are free)``
+    (the n_sel-th smallest occupancy clock)."""
+    neg_busy, _ = jax.lax.top_k(-state.busy_until, cfg.n_sel)
+    kth_free = -neg_busy[cfg.n_sel - 1]
+    return jnp.maximum(state.job_clock[state.job], kth_free)
+
+
+def available_mask(state: EnvState, now: jax.Array) -> jax.Array:
+    return state.busy_until <= now + 1e-6
+
+
+def _apply_round(cfg: EnvConfig, state: EnvState, plan: jax.Array,
+                 exp_noise: jax.Array, fail_u: jax.Array
+                 ) -> Tuple[EnvState, StepOut]:
+    """Deterministic round transition given the stochastic draws.
+
+    ``exp_noise``: (K,) unit-exponential draws (Formula 4's jitter);
+    ``fail_u``: (K,) uniforms for the fault coin-flips. Exposed separately
+    so rollouts can pre-draw whole trajectories in bulk and so the
+    engine-parity test can inject the exact draws the live
+    ``DevicePool``/engine consumed.
+    """
+    scen = state.scen
+    job = state.job
+    now = release_instant(cfg, state)
+
+    # Formula 4 realized times from the precomputed per-job shift/scale
+    # (selected devices are available => no wait term).
+    times = scen.shift[job] + exp_noise * scen.scale[job]
+
+    sel = plan
+    fail = sel & (fail_u < scen.failure_rate)
+    survivors = sel & ~fail
+    # Engine guard: if every selected device failed, keep the first one.
+    first_sel = jax.nn.one_hot(jnp.argmax(sel), cfg.num_devices,
+                               dtype=bool) & sel
+    survivors = jnp.where(survivors.any(), survivors, first_sel)
+    fail = sel & ~survivors
+
+    # Formula 3 via the scoring core's jitted masked-max reduction.
+    round_time = scoring.jax_round_time_fn()(times, survivors[None])[0]
+    t_end = now + round_time
+
+    busy = jnp.where(sel, now + times, state.busy_until)
+    busy = jnp.where(fail, t_end + cfg.failure_cooldown, busy)  # quarantine
+
+    # Formula 2/5 via the scoring core. Counts are mean-centered (f32-safe
+    # variance); the absolute Formula-5 value recorded by the engine is the
+    # increment plus Var(c) = E[c_centered^2]. The cost term uses the
+    # increment or the absolute form per cfg.delta_fairness, exactly as the
+    # engine's realized cost does.
+    counts_j = state.counts[job]
+    counts_c = counts_j - jnp.mean(counts_j)
+    dfair = scoring.jax_fairness_fn(True)(counts_c, plan[None])[0]
+    fairness = dfair + jnp.mean(jnp.square(counts_c))
+    cost_fair = dfair if cfg.delta_fairness else fairness
+    cost = (cfg.alpha * round_time / scen.time_scale
+            + cfg.beta * cost_fair / scen.fairness_scale)
+
+    new_state = state._replace(
+        busy_until=busy,
+        counts=state.counts.at[job].add(survivors.astype(jnp.float32)),
+        round_idx=state.round_idx.at[job].add(1),
+        job_clock=state.job_clock.at[job].set(t_end),
+        job=(job + 1) % cfg.num_jobs,
+        t=state.t + 1)
+    out = StepOut(cost=cost, round_time=round_time, fairness=fairness,
+                  dfair=dfair, reward=-cost, job=job, now=now)
+    return new_state, out
+
+
+def step(cfg: EnvConfig, state: EnvState, plan: jax.Array
+         ) -> Tuple[EnvState, StepOut]:
+    """One scheduling round of the round-robin job under ``plan`` ((K,)
+    bool, exactly n_sel available devices)."""
+    key, k_t, k_f = jax.random.split(state.key, 3)
+    exp_noise = jax.random.exponential(k_t, (cfg.num_devices,))
+    fail_u = jax.random.uniform(k_f, (cfg.num_devices,))
+    return _apply_round(cfg, state._replace(key=key), plan, exp_noise, fail_u)
+
+
+# ---- policy plumbing (mirrors RLDSScheduler) -----------------------------
+
+def device_features(cfg: EnvConfig, state: EnvState, now: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(K, F) per-device policy features + availability mask.
+
+    Field-for-field mirror of ``RLDSScheduler._features`` (keep in sync):
+    [a, mu, E[t]+wait (job-specific), fairness count, availability, D^m].
+    The scenario-constant normalizations are precomputed at reset.
+    """
+    scen = state.scen
+    job = state.job
+    wait = jnp.maximum(state.busy_until - now, 0.0)
+    available = available_mask(state, now)
+    exp_t = scen.exp_base[job] + wait
+    counts = state.counts[job]
+    feats = jnp.stack([
+        scen.a_norm,
+        scen.mu_norm,
+        exp_t / (jnp.max(exp_t) + 1e-12),
+        counts / (jnp.max(counts) + 1.0),
+        available.astype(jnp.float32),
+        scen.data_norm[:, job],
+    ], axis=1)
+    return feats, available
+
+
+def plan_from_gumbel(logits: jax.Array, gumbel: jax.Array,
+                     available: jax.Array, n_sel: int) -> jax.Array:
+    """Gumbel top-k plan from pre-drawn Gumbel noise (Plackett-Luce without
+    replacement over the available set).
+
+    Precondition: ``available.sum() >= n_sel`` (``release_instant``
+    guarantees it inside rollouts). top_k cannot check this under jit, so
+    the result is post-masked with ``available``: a violating caller gets a
+    SMALLER plan (caught by ``validate_plan``), never a plan that schedules
+    busy devices.
+    """
+    g = jnp.where(available, logits + gumbel, -jnp.inf)
+    _, idx = jax.lax.top_k(g, n_sel)
+    return jnp.zeros(logits.shape[0], bool).at[idx].set(True) & available
+
+
+def sample_plan(key: jax.Array, logits: jax.Array, available: jax.Array,
+                n_sel: int) -> jax.Array:
+    """On-policy Gumbel top-k plan — the policy-converter sampling RLDS
+    uses, minus the host-side ε-swap (Gumbel noise already provides proper
+    visitation)."""
+    return plan_from_gumbel(logits, jax.random.gumbel(key, logits.shape),
+                            available, n_sel)
+
+
+def greedy_plan(logits: jax.Array, available: jax.Array, n_sel: int
+                ) -> jax.Array:
+    """Deterministic top-k (the explore=False policy converter). Same
+    ``available.sum() >= n_sel`` precondition and post-mask as
+    ``plan_from_gumbel``."""
+    g = jnp.where(available, logits, -jnp.inf)
+    _, idx = jax.lax.top_k(g, n_sel)
+    return jnp.zeros(logits.shape[0], bool).at[idx].set(True) & available
+
+
+def policy_rollout(cfg: EnvConfig, params, state: EnvState, num_steps: int,
+                   deterministic: bool = False
+                   ) -> Tuple[EnvState, Transition]:
+    """``lax.scan`` of the RLDS policy over ``num_steps`` rounds.
+
+    Returns the final state and a (num_steps,)-stacked ``Transition`` — the
+    REINFORCE ingredients (features/plan/availability for the log-prob,
+    reward for the advantage). All trajectory noise is pre-drawn in three
+    bulk ``jax.random`` calls.
+    """
+    from repro.core.schedulers.rlds import _policy_logits
+
+    K = cfg.num_devices
+    key, k_e, k_f, k_g = jax.random.split(state.key, 4)
+    state = state._replace(key=key)
+    exp_noise = jax.random.exponential(k_e, (num_steps, K))
+    fail_u = jax.random.uniform(k_f, (num_steps, K))
+    gumbel = (jnp.zeros((num_steps, K)) if deterministic
+              else jax.random.gumbel(k_g, (num_steps, K)))
+
+    def one(st, xs):
+        noise, fu, g = xs
+        now = release_instant(cfg, st)
+        feats, available = device_features(cfg, st, now)
+        logits = _policy_logits(params, feats)
+        plan = plan_from_gumbel(logits, g, available, cfg.n_sel)
+        st, out = _apply_round(cfg, st, plan, noise, fu)
+        return st, Transition(feats=feats, plan=plan, available=available,
+                              reward=out.reward, cost=out.cost,
+                              round_time=out.round_time, job=out.job)
+
+    return jax.lax.scan(one, state, (exp_noise, fail_u, gumbel))
+
+
+def batch_rollout(cfg: EnvConfig, params, states: EnvState, num_steps: int,
+                  deterministic: bool = False
+                  ) -> Tuple[EnvState, Transition]:
+    """vmap of ``policy_rollout`` over E environments: transitions come back
+    (E, num_steps, ...)."""
+    return jax.vmap(
+        lambda s: policy_rollout(cfg, params, s, num_steps, deterministic)
+    )(states)
+
+
+def random_rollout(cfg: EnvConfig, state: EnvState, num_steps: int
+                   ) -> Tuple[EnvState, StepOut]:
+    """Uniform-random-plan rollout (no policy): the env-only throughput
+    workload and the random-scheduler baseline. Identical environment
+    machinery to ``policy_rollout`` minus the policy network."""
+    K = cfg.num_devices
+    key, k_e, k_f, k_g = jax.random.split(state.key, 4)
+    state = state._replace(key=key)
+    noise = (jax.random.exponential(k_e, (num_steps, K)),
+             jax.random.uniform(k_f, (num_steps, K)),
+             jax.random.gumbel(k_g, (num_steps, K)))
+
+    def one(st, xs):
+        e, fu, g = xs
+        now = release_instant(cfg, st)
+        available = available_mask(st, now)
+        plan = plan_from_gumbel(jnp.zeros(K), g, available, cfg.n_sel)
+        return _apply_round(cfg, st, plan, e, fu)
+
+    return jax.lax.scan(one, state, noise)
+
+
+def batch_random_rollout(cfg: EnvConfig, states: EnvState, num_steps: int
+                         ) -> Tuple[EnvState, StepOut]:
+    return jax.vmap(lambda s: random_rollout(cfg, s, num_steps))(states)

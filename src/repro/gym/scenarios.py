@@ -1,0 +1,83 @@
+"""Scenario randomization and curricula for the scheduler gym.
+
+A ``ScenarioSpec`` is a static (hashable) description of the DISTRIBUTION a
+gym environment draws its episode from: capability heterogeneity, device
+fluctuation, data-size spread, job mix (local epochs), and failure rate.
+``sample_scenario`` draws one concrete scenario per reset — under ``vmap``
+every parallel environment gets an independent draw, so a single training
+batch spans the whole curriculum.
+
+Pool-SIZE diversity is the one axis that cannot vary inside a batch (array
+shapes are static under jit); the trainer handles it by cycling through
+curriculum STAGES with different ``EnvConfig.num_devices`` (see
+``repro.gym.train.default_stages``).
+
+The named ``CURRICULA`` map to the ROADMAP's scenario axes: the default
+paper-like regime, extreme heterogeneity, flaky fleets, mixed job
+complexity, and the all-of-the-above "full" curriculum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Per-episode scenario distribution (static under jit).
+
+    ``a_lo`` anchors the fastest device class; each episode draws a
+    heterogeneity SPREAD in decades from ``hetero_decades`` and scatters
+    device capabilities log-uniformly across it — so one batch contains
+    both near-homogeneous and 100x-spread fleets. ``tau_range`` draws
+    per-job local epochs (the job mix); ``failure_range`` draws the
+    episode's device drop probability.
+    """
+
+    a_lo: float = 2e-4
+    hetero_decades: Tuple[float, float] = (0.7, 1.3)
+    mu_range: Tuple[float, float] = (1.0, 10.0)
+    data_range: Tuple[float, float] = (200.0, 600.0)
+    tau_range: Tuple[int, int] = (5, 5)
+    failure_range: Tuple[float, float] = (0.0, 0.0)
+
+
+CURRICULA: Dict[str, ScenarioSpec] = {
+    # Paper-like regime: the DevicePool.heterogeneous defaults (10x spread).
+    "default": ScenarioSpec(),
+    # Edge fleets with up to ~300x capability spread.
+    "hetero": ScenarioSpec(hetero_decades=(1.0, 2.5)),
+    # Unreliable fleets: up to 30% of a cohort drops every round.
+    "flaky": ScenarioSpec(failure_range=(0.0, 0.3)),
+    # Mixed job complexity: per-job local epochs drawn from [1, 10].
+    "mixed-jobs": ScenarioSpec(tau_range=(1, 10)),
+    # Everything at once — the hardest training distribution.
+    "full": ScenarioSpec(hetero_decades=(0.7, 2.5), tau_range=(1, 10),
+                         failure_range=(0.0, 0.3)),
+}
+
+
+def sample_scenario(key: jax.Array, scen: ScenarioSpec, num_devices: int,
+                    num_jobs: int):
+    """Draw one scenario: (a, mu, data, taus, failure_rate) as jnp arrays."""
+    k_spread, k_a, k_mu, k_d, k_tau, k_f = jax.random.split(key, 6)
+    spread = jax.random.uniform(
+        k_spread, (), minval=scen.hetero_decades[0],
+        maxval=scen.hetero_decades[1])
+    # Log-uniform capabilities over the episode's spread (in decades).
+    a = scen.a_lo * 10.0 ** (jax.random.uniform(k_a, (num_devices,)) * spread)
+    mu = jax.random.uniform(k_mu, (num_devices,), minval=scen.mu_range[0],
+                            maxval=scen.mu_range[1])
+    data = jax.random.uniform(k_d, (num_devices, num_jobs),
+                              minval=scen.data_range[0],
+                              maxval=scen.data_range[1])
+    taus = jax.random.randint(k_tau, (num_jobs,), scen.tau_range[0],
+                              scen.tau_range[1] + 1).astype(jnp.float32)
+    failure_rate = jax.random.uniform(k_f, (), minval=scen.failure_range[0],
+                                      maxval=scen.failure_range[1])
+    return (a.astype(jnp.float32), mu.astype(jnp.float32),
+            data.astype(jnp.float32), taus, failure_rate.astype(jnp.float32))
