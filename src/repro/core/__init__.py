@@ -3,6 +3,9 @@
 - ``devices``  — heterogeneous device pool with shifted-exponential time model (Formula 4)
 - ``cost``     — time + data-fairness cost model (Formulas 2, 3, 5, 8)
 - ``plans``    — scheduling-plan representation and invariants
+- ``scoring``  — batched plan scoring (numpy/jax/pallas, one path under all)
+- ``search``   — fused on-device search loops (jitted multi-chain SA, GA,
+  BODS acquisition) behind the schedulers' ``search_backend`` knob
 - ``schedulers`` — BODS (GP+EI), RLDS (LSTM+REINFORCE), Random, FedCS, Greedy,
   Genetic, SimulatedAnnealing
 - ``multijob`` — event-driven parallel multi-job engine (Fig. 1 process)

@@ -182,7 +182,12 @@ class MultiJobEngine:
     def _launch(self, job: int, now: float) -> None:
         js = self.jobs[job]
         ctx = self._make_ctx(job, now)
-        avail = int(ctx.available.sum())
+        # Populate the context's per-round available-id cache here: the
+        # availability-independent derived arrays (float32 time mirror,
+        # available-id list) are computed at most once per _make_ctx and
+        # reused by greedy/FedCS and the fused searchers instead of being
+        # recomputed per candidate batch.
+        avail = int(ctx.available_indices().size)
         if avail < ctx.n_sel:
             # Distinguish a transient shortage (devices will free soon) from
             # a PERMANENT one (devices failed forever / selection larger than

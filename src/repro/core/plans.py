@@ -104,3 +104,35 @@ def repair_plan(
         add = rng.choice(free, size=n_sel - n, replace=False)
         p[add] = True
     return p
+
+
+def repair_plans(
+    rng: np.random.Generator, plans: np.ndarray, available: np.ndarray,
+    n_sel: int
+) -> np.ndarray:
+    """Vectorized ``repair_plan``: a whole (P, K) population in one pass.
+
+    Same semantics per row — occupied devices dropped, valid selections kept
+    (random extras dropped when over ``n_sel``, random available top-ups when
+    under), idempotent on already-valid plans — via one priority top-k
+    instead of P Python loops: key = 1[selected & available] + U(0, 1),
+    masked to -inf off the available set; the ``n_sel`` largest keys are the
+    repaired selection. This is the same top-k machinery the fused searchers
+    (``repro.core.search``) and the gym's Gumbel-top-k plan primitive run
+    in-graph. Like ``repair_plan``, raises when the available set cannot
+    host ``n_sel`` devices (the jax twin, which cannot raise under jit,
+    returns under-full masked plans instead).
+    """
+    plans = np.atleast_2d(np.asarray(plans, dtype=bool))
+    P, K = plans.shape
+    if n_sel == 0 or P == 0:
+        return np.zeros((P, K), dtype=bool)
+    n_avail = int(np.count_nonzero(available))
+    if n_avail < n_sel:
+        raise ValueError(f"need {n_sel} available devices, have {n_avail}")
+    keys = (plans & available[None, :]) + rng.random((P, K))
+    keys = np.where(available[None, :], keys, -np.inf)
+    sel = np.argpartition(-keys, n_sel - 1, axis=1)[:, :n_sel]
+    out = np.zeros((P, K), dtype=bool)
+    np.put_along_axis(out, sel, True, axis=1)
+    return out

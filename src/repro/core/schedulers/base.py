@@ -27,6 +27,28 @@ class SchedulingContext:
     # learn online — BODS, RLDS — consume this as feedback).
     last_plan: Optional[np.ndarray] = None
     last_cost: Optional[float] = None
+    # Per-round derived-array caches, computed at most ONCE per context (the
+    # engine builds one context per launch): the float32 expected-time mirror
+    # every jitted search/scoring path consumes, and the available-device id
+    # list the closed-form schedulers (greedy/FedCS) and the engine share.
+    # Lazy so host-only paths never pay for them; init=False so no
+    # constructor (or dataclasses.replace) can smuggle in a stale cache.
+    _times32: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _avail_idx: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def times32(self) -> np.ndarray:
+        """float32 mirror of ``expected_times`` (cached per round)."""
+        if self._times32 is None:
+            self._times32 = self.expected_times.astype(np.float32)
+        return self._times32
+
+    def available_indices(self) -> np.ndarray:
+        """``np.flatnonzero(available)`` (cached per round)."""
+        if self._avail_idx is None:
+            self._avail_idx = np.flatnonzero(self.available)
+        return self._avail_idx
 
 
 class SchedulerBase(abc.ABC):
@@ -41,9 +63,21 @@ class SchedulerBase(abc.ABC):
 
     name: str = "base"
 
-    def __init__(self, cost_model: CostModel, seed: int = 0):
+    #: Which plan-search implementation ``schedule`` runs: ``"fused"`` (the
+    #: default) uses the jitted on-device loops in ``repro.core.search``;
+    #: ``"host"`` keeps the historical sequential numpy path. Schedulers
+    #: without a search loop (random/greedy/FedCS/DNN/RLDS) accept and
+    #: ignore the knob — their one code path serves both settings.
+    SEARCH_BACKENDS = ("host", "fused")
+
+    def __init__(self, cost_model: CostModel, seed: int = 0,
+                 search_backend: str = "fused"):
+        if search_backend not in self.SEARCH_BACKENDS:
+            raise ValueError(f"search_backend {search_backend!r} not in "
+                             f"{self.SEARCH_BACKENDS}")
         self.cost_model = cost_model
         self.rng = np.random.default_rng(seed)
+        self.search_backend = search_backend
         # Estimated Formula-2 cost of the most recently returned plan.
         self.last_estimated_cost: Optional[float] = None
 

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plans import gumbel_topk_plans, random_plans, repair_plan
+from repro.core import search
+from repro.core.plans import gumbel_topk_plans, random_plans, repair_plans
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.experiment.registry import register_scheduler
 
@@ -60,52 +61,16 @@ def _norm01(x: np.ndarray, mask: np.ndarray = None) -> np.ndarray:
     return np.clip((x - lo) / spread, 0.0, 1.0)
 
 
-@jax.jit
-def _ei_scores(F, resid, est_obs, valid, cand_feats, cand_est, noise):
-    """Expected Improvement under the masked GP posterior in feature space.
-
-    The GP prior mean is the scheduler's ESTIMATED cost (the cost model); the
-    GP itself models the realized-estimated residual. Predicted candidate
-    cost = cand_est + mu_resid(cand); the incumbent is the PLUGIN best (min
-    posterior mean over observed plans), which is robust to the noise-biased
-    min-of-observations.
-
-    F: (L, d) observed features; resid: (L,) realized-estimated (normalized);
-    est_obs: (L,) estimated costs of observations; valid: (L,);
-    cand_feats: (P, d); cand_est: (P,). Returns (P,) EI (higher = better).
-    """
-    m = valid.astype(jnp.float32)
-    mm = m[:, None] * m[None, :]
-
-    def matern52(sq):
-        r = jnp.sqrt(jnp.maximum(sq, 1e-12))
-        return (1.0 + jnp.sqrt(5.0) * r + 5.0 * sq / 3.0) * jnp.exp(-jnp.sqrt(5.0) * r)
-
-    d_nn = jnp.sum((F[:, None, :] - F[None, :, :]) ** 2, -1)
-    K_nn = matern52(d_nn) * mm + (1.0 - mm) * jnp.eye(F.shape[0])
-    K_nn = K_nn + (noise + 1e-6) * jnp.eye(F.shape[0])
-
-    d_nc = jnp.sum((F[:, None, :] - cand_feats[None, :, :]) ** 2, -1)
-    K_nc = matern52(d_nc) * m[:, None]
-
-    chol = jnp.linalg.cholesky(K_nn)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), resid * m)
-    mu_c = cand_est + K_nc.T @ alpha                       # posterior mean, candidates
-    v = jax.scipy.linalg.solve_triangular(chol, K_nc, lower=True)
-    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
-    sigma = jnp.sqrt(var)
-
-    # WITHIN-ROUND incumbent: the cost landscape is nonstationary (the
-    # fairness term moves with the evolving counts state), so past-round
-    # observations are not comparable incumbents — EI against them collapses
-    # to ~0 once the landscape shifts. The incumbent is therefore the best
-    # posterior-mean candidate of THIS round; EI arbitrates exploitation
-    # (low mu_c) vs exploration (high sigma) among the current feasible set.
-    best = jnp.min(mu_c)
-    z = (best - mu_c) / sigma
-    cdf = jax.scipy.stats.norm.cdf(z)
-    pdf = jax.scipy.stats.norm.pdf(z)
-    return (best - mu_c) * cdf + sigma * pdf
+# Expected Improvement under the masked GP posterior in feature space.
+#
+# The GP prior mean is the scheduler's ESTIMATED cost (the cost model); the
+# GP itself models the realized-estimated residual. Predicted candidate
+# cost = cand_est + mu_resid(cand); the incumbent is the PLUGIN best (min
+# posterior mean over observed plans), which is robust to the noise-biased
+# min-of-observations. The traced core lives in ``repro.core.search``
+# (shared verbatim by the fused one-call acquisition and the vmapped
+# all-jobs form ``search.ei_scores_jobs``); this is its host-path jit.
+_ei_scores = jax.jit(search.ei_scores)
 
 
 @register_scheduler("bods")
@@ -114,8 +79,8 @@ class BODSScheduler(SchedulerBase):
 
     def __init__(self, cost_model, seed: int = 0, num_candidates: int = 256,
                  init_points: int = 16, local_search: bool = True,
-                 gp_noise: float = 0.25):
-        super().__init__(cost_model, seed)
+                 gp_noise: float = 0.25, search_backend: str = "fused"):
+        super().__init__(cost_model, seed, search_backend=search_backend)
         self.num_candidates = num_candidates
         self.init_points = init_points
         self.local_search = local_search
@@ -218,26 +183,24 @@ class BODSScheduler(SchedulerBase):
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
         if not self._initialized[ctx.job]:
             self._bootstrap(ctx)
+        if self.search_backend == "fused":
+            return self._schedule_fused(ctx)
         n_rand = self.num_candidates // 4
         cands = np.concatenate([
             random_plans(self.rng, ctx.available, ctx.n_sel, n_rand),
             self._structured_candidates(ctx, self.num_candidates - n_rand),
         ])
         if self.local_search and self._head[ctx.job] > 0:
-            # Mutations of the best observed plan, repaired onto the feasible set.
+            # Mutations of the best observed plan, repaired onto the
+            # feasible set — the same proposal the fused path ships to
+            # device (search._mutate_plan_host + the vectorized repair).
             j = ctx.job
             best_i = int(np.argmin(np.where(self._valid[j] > 0, self._y[j], np.inf)))
-            base = self._plans[j, best_i].copy()
             n_mut = min(32, self.num_candidates // 4)
-            for i in range(n_mut):
-                mutant = base.copy()
-                flips = self.rng.integers(1, 4)
-                on, off = np.flatnonzero(mutant), np.flatnonzero(~mutant)
-                for _ in range(flips):
-                    if on.size and off.size:
-                        mutant[self.rng.choice(on)] = False
-                        mutant[self.rng.choice(off)] = True
-                cands[i] = repair_plan(self.rng, mutant, ctx.available, ctx.n_sel)
+            mutants = search._mutate_plan_host(
+                self.rng, self._plans[j, best_i], n_mut)
+            cands[:n_mut] = repair_plans(self.rng, mutants, ctx.available,
+                                         ctx.n_sel)
 
         y = self._y[ctx.job]
         est = self._est[ctx.job]
@@ -248,7 +211,6 @@ class BODSScheduler(SchedulerBase):
         ei = np.asarray(_ei_scores(
             jnp.asarray(self._F[ctx.job]),
             jnp.asarray((y - est) / sd * valid),      # residual (normalized)
-            jnp.asarray(est / sd * valid),
             jnp.asarray(valid),
             jnp.asarray(cand_feats),
             jnp.asarray(cand_est / sd),
@@ -256,6 +218,37 @@ class BODSScheduler(SchedulerBase):
         choice = int(np.argmax(ei))
         self.last_estimated_cost = float(cand_est[choice])
         return cands[choice]
+
+    # ---- fused acquisition: the whole of Lines 3-4 in one jitted call ----
+
+    def _schedule_fused(self, ctx: SchedulingContext) -> np.ndarray:
+        """Candidate generation + featurization + GP/EI + argmax on-device
+        (``search.bods_acquire``); only the ring slicing stays host-side.
+        Same acquisition math as the host path — candidates come from the
+        same random/structured/local-search proposal mix, features from the
+        same phi(V) formulas — with device-resident search replacing the
+        ~six host passes over the (P, K) candidate block."""
+        j = ctx.job
+        base_plan = None
+        if self.local_search and self._head[j] > 0:
+            best_i = int(np.argmin(np.where(self._valid[j] > 0,
+                                            self._y[j], np.inf)))
+            base_plan = self._plans[j, best_i]
+        cm = self.cost_model
+        plan, est = search.bods_acquire(
+            self.rng, ctx.times32(), ctx.counts, ctx.available,
+            cm.pool.mu, ctx.n_sel,
+            F=self._F[j], y=self._y[j], est=self._est[j],
+            valid=self._valid[j], base_plan=base_plan,
+            alpha=cm.alpha, beta=cm.beta, time_scale=cm.time_scale,
+            fairness_scale=cm.fairness_scale,
+            delta_fairness=cm.delta_fairness,
+            num_candidates=self.num_candidates,
+            n_mut=min(32, self.num_candidates // 4),
+            local_search=self.local_search, gp_noise=self.gp_noise,
+            avail_idx=ctx.available_indices())
+        self.last_estimated_cost = float(est)
+        return plan
 
     # ---- Algorithm 1, Lines 6-7: realized cost becomes an observation ----
 

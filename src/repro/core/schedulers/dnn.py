@@ -56,8 +56,12 @@ class DNNScheduler(SchedulerBase):
     name = "dnn"
 
     def __init__(self, cost_model, seed: int = 0, num_candidates: int = 256,
-                 epsilon: float = 0.1, lr: float = 1e-2, train_steps: int = 4):
-        super().__init__(cost_model, seed)
+                 epsilon: float = 0.1, lr: float = 1e-2, train_steps: int = 4,
+                 search_backend: str = "fused"):
+        # search_backend accepted (and ignored) for a uniform scheduler
+        # constructor contract: DNN has no fused search loop — its one
+        # candidate-scoring path serves both settings.
+        super().__init__(cost_model, seed, search_backend=search_backend)
         self.num_candidates = num_candidates
         self.epsilon = epsilon
         self.lr = lr

@@ -19,12 +19,14 @@ from repro.experiment.registry import register_scheduler
 class FedCSScheduler(SchedulerBase):
     name = "fedcs"
 
-    def __init__(self, cost_model, seed: int = 0, deadline_quantile: float = 0.6):
-        super().__init__(cost_model, seed)
+    def __init__(self, cost_model, seed: int = 0,
+                 deadline_quantile: float = 0.6,
+                 search_backend: str = "fused"):
+        super().__init__(cost_model, seed, search_backend=search_backend)
         self.deadline_quantile = deadline_quantile
 
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
-        avail = np.flatnonzero(ctx.available)
+        avail = ctx.available_indices()  # cached per round (shared w/ engine)
         times = ctx.expected_times
         deadline = np.quantile(times[avail], self.deadline_quantile)
         order = self.rng.permutation(avail)

@@ -3,12 +3,22 @@
 Population of valid plans; tournament selection; uniform crossover + repair
 (cardinality and availability restored); mutation swaps a selected device for
 a free one. Fitness = -TotalCost (estimated).
+
+Two search backends (``search_backend``):
+
+- ``fused`` (default): all generations under one jitted ``lax.scan``
+  (``repro.core.search.ga_search``) with vmapped tournament selection, the
+  vectorized population repair, and the greedy plan seeding individual 0.
+- ``host``: the historical per-individual numpy loops, kept as the
+  behavioural reference (``benchmarks/bench_sched.py`` gates fused
+  against it).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core import search
 from repro.core.plans import random_plans, repair_plan
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.experiment.registry import register_scheduler
@@ -19,13 +29,25 @@ class GeneticScheduler(SchedulerBase):
     name = "genetic"
 
     def __init__(self, cost_model, seed: int = 0, population: int = 32,
-                 generations: int = 12, mutation_rate: float = 0.2):
-        super().__init__(cost_model, seed)
+                 generations: int = 12, mutation_rate: float = 0.2,
+                 search_backend: str = "fused"):
+        super().__init__(cost_model, seed, search_backend=search_backend)
         self.population = population
         self.generations = generations
         self.mutation_rate = mutation_rate
 
     def schedule(self, ctx: SchedulingContext) -> np.ndarray:
+        if self.search_backend == "fused":
+            cm = self.cost_model
+            plan = search.ga_search(
+                self.rng, ctx.times32(), ctx.counts, ctx.available,
+                ctx.n_sel, alpha=cm.alpha, beta=cm.beta,
+                time_scale=cm.time_scale, fairness_scale=cm.fairness_scale,
+                delta_fairness=cm.delta_fairness,
+                population=self.population, generations=self.generations,
+                mutation_rate=self.mutation_rate,
+                avail_idx=ctx.available_indices())
+            return self._score_plan(ctx, plan)
         pop = random_plans(self.rng, ctx.available, ctx.n_sel, self.population)
         for _ in range(self.generations):
             cost = self._cost_of(ctx, pop)

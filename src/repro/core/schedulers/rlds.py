@@ -133,8 +133,11 @@ class RLDSScheduler(SchedulerBase):
 
     def __init__(self, cost_model, seed: int = 0, lr: float = 1e-2,
                  epsilon: float = 0.1, gamma: float = 0.1,
-                 pretrain_rounds: int = 300, pretrain_plans: int = 8):
-        super().__init__(cost_model, seed)
+                 pretrain_rounds: int = 300, pretrain_plans: int = 8,
+                 search_backend: str = "fused"):
+        # search_backend accepted (and ignored) for a uniform scheduler
+        # constructor contract: RLDS's policy sampling is already jitted.
+        super().__init__(cost_model, seed, search_backend=search_backend)
         self.epsilon = epsilon
         self.gamma = gamma  # EMA factor for the baseline b_m (paper Line 7)
         self.params = init_policy(jax.random.PRNGKey(seed))

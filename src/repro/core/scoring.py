@@ -18,11 +18,15 @@ devices with Formula 2:
   (sufficient-statistics reduction; falls back to the jax reference with a
   logged warning off-TPU).
 
-``backend="auto"`` (the default) picks numpy below ``AUTO_NUMPY_MAX``
-elements and jax above — exactly the size/backend dispatch the model
-kernels in ``repro/kernels/ops.py`` use. The process-wide default can be
-flipped with ``set_default_backend`` (the experiment layer wires
-``ExperimentSpec.fleet.scoring_backend`` through ``CostModel``).
+``backend="auto"`` (the default) picks numpy below a per-FORM element
+threshold (``AUTO_NUMPY_MAX_DENSE`` / ``AUTO_NUMPY_MAX_INDEX``) and jax
+above — the same size/backend dispatch the model kernels in
+``repro/kernels/ops.py`` use, but calibrated separately for the dense
+(P, K) sweep and the (P, n_sel) gather fast path (the index form's numpy
+gather stays ahead of jit dispatch for ~4x more elements). The
+process-wide default can be flipped with ``set_default_backend`` (the
+experiment layer wires ``ExperimentSpec.fleet.scoring_backend`` through
+``CostModel``).
 """
 
 from __future__ import annotations
@@ -38,9 +42,16 @@ logger = logging.getLogger(__name__)
 
 VALID_BACKENDS = ("auto", "numpy", "jax", "pallas")
 
-# Below this many (P * K) elements the numpy path wins: jit dispatch +
-# host->device transfer costs more than the whole reduction.
-AUTO_NUMPY_MAX = 1 << 17
+# Below these many elements the numpy path wins: jit dispatch + host->device
+# transfer costs more than the whole reduction. Calibrated per FORM from
+# BENCH_fleet.json (CPU): dense numpy/jax cross over between P*K = 2.6e5
+# (K=1e3, P=256: a tie) and 4.1e5 (jax clearly ahead); the index-form numpy
+# gather is still ahead at P*n_sel = 4.1e5 (K=1e4, P=4096) and loses by
+# 4.1e6 (K=1e5), so its threshold sits a factor of 4 higher.
+AUTO_NUMPY_MAX_DENSE = 1 << 18
+AUTO_NUMPY_MAX_INDEX = 1 << 20
+# Back-compat alias (pre-calibration single threshold == the dense one).
+AUTO_NUMPY_MAX = AUTO_NUMPY_MAX_DENSE
 
 _state = threading.local()
 _warned_pallas_fallback = False
@@ -56,13 +67,19 @@ def get_default_backend() -> str:
     return getattr(_state, "backend", "auto")
 
 
-def resolve_backend(backend: Optional[str], num_elements: int) -> str:
-    """Concrete backend for a (P*K)-element scoring problem."""
+def resolve_backend(backend: Optional[str], num_elements: int,
+                    form: str = "dense") -> str:
+    """Concrete backend for an ``num_elements``-sized scoring problem.
+
+    ``form`` is ``dense`` (a (P, K) sweep) or ``index`` (a (P, n_sel)
+    gather): the auto dispatch uses a separate measured crossover per form.
+    """
     b = backend if backend is not None else get_default_backend()
     if b not in VALID_BACKENDS:
         raise ValueError(f"backend {b!r} not in {VALID_BACKENDS}")
     if b == "auto":
-        return "numpy" if num_elements <= AUTO_NUMPY_MAX else "jax"
+        cap = AUTO_NUMPY_MAX_INDEX if form == "index" else AUTO_NUMPY_MAX_DENSE
+        return "numpy" if num_elements <= cap else "jax"
     if b == "pallas" and not _pallas_available():
         global _warned_pallas_fallback
         if not _warned_pallas_fallback:
@@ -294,7 +311,7 @@ def score_plan_indices(times: np.ndarray, counts: np.ndarray,
         if delta_fairness:
             return np.zeros(P, dtype=np.float64)
         return np.full(P, beta * float(np.var(counts)) / fairness_scale)
-    b = resolve_backend(backend, P * S)
+    b = resolve_backend(backend, P * S, form="index")
     if b == "numpy":
         t = times[idx].max(axis=1) / time_scale
         w = 2.0 * counts + 1.0

@@ -1,0 +1,604 @@
+"""Fused on-device scheduler search: the plan-SEARCH loops, jitted.
+
+PR 2 made plan *evaluation* fast (one batched scoring call under every
+scheduler); this module makes the *search* around it fast. The host
+searchers step one proposal at a time through Python — SA performs
+``steps`` sequential cost calls per decision, the GA repairs and mutates
+children in per-individual loops — so at fleet scale (K = 1e4+) scheduler
+decision latency dominates round time. Here the full loops run as jitted
+``lax.scan`` programs:
+
+- ``sa_search``   — C parallel simulated-annealing chains stepped under one
+  ``lax.scan``: plans carried in INDEX form ((C, n_sel) device ids — the
+  scoring core's fleet fast path, so each step is n_sel gathers instead of
+  a K-wide sweep), swap/accept noise PRE-DRAWN on the host (the scan body
+  contains zero PRNG), masked one-selected-for-one-free swaps, geometric
+  cooling, running per-chain best, best-of-chains result. One jitted call
+  per decision instead of ``steps`` host round-trips.
+- ``ga_search``   — generations under ``lax.scan`` with vmapped tournament
+  selection, slot-wise uniform crossover on the index form (each slot
+  flips a coin to adopt the other parent's device at that slot, gated so
+  only devices absent from this parent are adopted — children are
+  duplicate-free and exactly ``n_sel``-sized by construction, so no
+  repair/sort step runs mid-loop), swap mutation, elitism.
+- ``bods_acquire`` — the full BODS acquisition (candidate generation:
+  random + structured Gumbel-top-k over availability logits in-graph,
+  plus host-prepared local-search mutants of the best observed plan run
+  through the vectorized in-graph repair; featurization phi(V);
+  Matern-5/2 GP posterior + Expected Improvement; argmax) in ONE jitted
+  call per decision. ``ei_scores_jobs`` vmaps the GP posterior over the
+  job axis so all M jobs' candidate sets score in one call.
+
+Conventions shared with ``repro.core.scoring``: times/counts are float32
+on device, counts are mean-centered in float64 on the host first (variance
+is shift-invariant; centering keeps f32 cancellation-free), a plan is a
+(K,) bool row with exactly ``n_sel`` True entries inside ``available`` —
+equivalently an (n_sel,) row of distinct available device ids. Every
+jitted builder is keyed on its STATIC shape knobs via ``lru_cache`` (the
+per-experiment set is tiny: one compile per (steps, chains, n_sel)).
+
+Both fused population inits seed one slot with the greedy plan (the
+``n_sel`` fastest available devices — a standard memetic warm start): at a
+matched evaluation budget the fused searchers then dominate the host path
+on chosen-plan cost, which ``benchmarks/bench_sched.py`` gates on.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.plans import plan_from_indices
+
+# ---- traced building blocks ---------------------------------------------
+
+
+def _fairness_from_stats(counts_c, n, wsum, delta_fairness: bool):
+    """Formula-5 fairness from the centered sufficient statistics — the
+    ONE copy of the variance expansion inside this module (shared by the
+    dense/index cost paths and the BODS featurization; semantics identical
+    to ``scoring._jax_score_fn``). ``n``: (P,) selected counts; ``wsum``:
+    (P,) sums of 2*counts_c+1 over the selection."""
+    import jax.numpy as jnp
+
+    K = float(counts_c.shape[-1])
+    c1 = jnp.sum(counts_c)
+    if delta_fairness:
+        return wsum / K - (2.0 * c1 * n + n * n) / (K * K)
+    c2 = jnp.sum(counts_c * counts_c)
+    return (c2 + wsum) / K - ((c1 + n) / K) ** 2
+
+
+def _dense_stats(times, counts_c, plans):
+    """(P, K) bool plans -> (round time t, n selected, wsum) — the masked
+    max + fairness sufficient statistics, one pass."""
+    import jax.numpy as jnp
+
+    masked = jnp.where(plans, times, -jnp.inf)
+    t = jnp.max(masked, axis=-1)
+    t = jnp.where(jnp.isfinite(t), t, 0.0)
+    w = 2.0 * counts_c + 1.0
+    n = jnp.sum(plans, axis=-1).astype(jnp.float32)
+    wsum = jnp.sum(jnp.where(plans, w, 0.0), axis=-1)
+    return t, n, wsum
+
+
+def plan_costs(times, counts_c, plans, alpha, beta, ts, fs,
+               delta_fairness: bool):
+    """(P, K) bool plans -> (P,) Formula-2 costs. Traced (safe under
+    jit/vmap/scan); semantics identical to ``scoring._jax_score_fn``.
+    ``counts_c`` must be mean-centered."""
+    t, n, wsum = _dense_stats(times, counts_c, plans)
+    f = _fairness_from_stats(counts_c, n, wsum, delta_fairness)
+    return alpha * t / ts + beta * f / fs
+
+
+def plan_costs_idx(times, counts_c, idx, alpha, beta, ts, fs,
+                   delta_fairness: bool):
+    """(P, n_sel) device-id plans -> (P,) Formula-2 costs (the index fast
+    path: n_sel gathers per plan, never a K-wide sweep). Rows must hold
+    distinct ids. Semantics identical to ``scoring._jax_score_idx_fn``."""
+    import jax.numpy as jnp
+
+    n = float(idx.shape[-1])
+    t = jnp.max(times[idx], axis=-1)
+    w = 2.0 * counts_c + 1.0
+    wsum = jnp.sum(w[idx], axis=-1)
+    f = _fairness_from_stats(counts_c, n, wsum, delta_fairness)
+    return alpha * t / ts + beta * f / fs
+
+
+def _gumbel_plans(key, logits, avail, n_sel: int):
+    """(P, K) logits -> (P, K) bool plans: Gumbel top-k over the available
+    set (the in-graph twin of ``plans.gumbel_topk_plans``)."""
+    import jax
+    import jax.numpy as jnp
+
+    g = jnp.where(avail[None, :], logits + jax.random.gumbel(key, logits.shape),
+                  -jnp.inf)
+    _, idx = jax.lax.top_k(g, n_sel)
+    plans = jnp.zeros(logits.shape, bool)
+    plans = plans.at[jnp.arange(logits.shape[0])[:, None], idx].set(True)
+    return plans & avail[None, :]
+
+
+def repair_plans_jax(key, plans, avail, n_sel: int):
+    """In-graph vectorized repair — jax twin of ``plans.repair_plans``.
+
+    Priority top-k: valid selections keep rank over everything else (key
+    1 + noise vs noise), occupied devices are masked out, noise tie-breaks
+    pick the random extras to drop / random available devices to add.
+    Idempotent on valid plans. Precondition: ``avail.sum() >= n_sel``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    keys = (plans & avail[None, :]) + jax.random.uniform(key, plans.shape)
+    keys = jnp.where(avail[None, :], keys, -jnp.inf)
+    _, idx = jax.lax.top_k(keys, n_sel)
+    out = jnp.zeros(plans.shape, bool)
+    out = out.at[jnp.arange(plans.shape[0])[:, None], idx].set(True)
+    return out & avail[None, :]
+
+
+def _swap_into(idx, pos, cand):
+    """Propose ``idx[row, pos[row]] = cand[row]`` per row, masked where
+    ``cand`` already sits in the row (a swap must introduce a NEW device).
+    Returns (proposal, moved_mask)."""
+    import jax.numpy as jnp
+
+    collision = jnp.any(idx == cand[:, None], axis=-1)
+    rows = jnp.arange(idx.shape[0])
+    nxt = idx.at[rows, pos].set(cand)
+    moved = ~collision
+    return jnp.where(moved[:, None], nxt, idx), moved
+
+
+def _greedy_indices(times: np.ndarray, avail_idx: np.ndarray,
+                    n_sel: int) -> np.ndarray:
+    """Host helper: ids of the n_sel fastest available devices."""
+    t_av = times[avail_idx]
+    cut = np.argpartition(t_av, n_sel - 1)[:n_sel]
+    return avail_idx[cut].astype(np.int32)
+
+
+def _init_indices(rng: np.random.Generator, avail_idx: np.ndarray,
+                  n_sel: int, rows: int) -> np.ndarray:
+    """``rows`` random n_sel-subsets of the available set: strided windows
+    of ONE permutation at random offsets — O(A + rows * n_sel) instead of
+    ``random_plan_indices``'s O(rows * A) per-row key draw (8 ms vs 0.1 ms
+    at A = 8000, rows = 32). Uniform marginals, distinct-within-row; rows
+    are windows of the same permutation, which for a population INIT is
+    diversity-preserving (near-disjoint coverage of the pool)."""
+    A = avail_idx.size
+    perm = rng.permutation(A)
+    offs = rng.integers(0, A, rows)
+    pos = (offs[:, None] + np.arange(n_sel)[None, :]) % A
+    return avail_idx[perm[pos]].astype(np.int32)
+
+
+def _swap_noise(rng: np.random.Generator, avail_idx: np.ndarray,
+                steps: int, rows: int, n_sel: int):
+    """Pre-drawn swap/accept noise for ``steps`` scan iterations: the slot
+    to vacate, the available device to propose (collisions with the current
+    selection mask the move on-device), and the Metropolis uniform."""
+    pos = rng.integers(0, n_sel, (steps, rows)).astype(np.int32)
+    cand = avail_idx[rng.integers(0, avail_idx.size, (steps, rows))]
+    u = rng.random((steps, rows)).astype(np.float32)
+    return pos, cand.astype(np.int32), u
+
+
+def _center(counts: np.ndarray) -> np.ndarray:
+    counts = np.asarray(counts, dtype=np.float64)
+    return (counts - float(counts.mean())).astype(np.float32)
+
+
+def _check_avail(avail_idx: np.ndarray, n_sel: int) -> None:
+    if avail_idx.size < n_sel:
+        raise ValueError(
+            f"need {n_sel} available devices, have {avail_idx.size}")
+
+
+# ---- (a) batched multi-chain simulated annealing -------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sa_fn(steps: int, chains: int, n_sel: int, delta_fairness: bool):
+    import jax
+    import jax.numpy as jnp
+
+    def run(init_idx, times, counts_c, pos, cand, accept_u,
+            alpha, beta, ts, fs, t0, cooling):
+        costs = plan_costs_idx(times, counts_c, init_idx, alpha, beta, ts,
+                               fs, delta_fairness)
+
+        def body(carry, xs):
+            idx, costs, best_i, best_c, temp = carry
+            pos_t, cand_t, u = xs
+            nxt, moved = _swap_into(idx, pos_t, cand_t)
+            nxt_cost = plan_costs_idx(times, counts_c, nxt, alpha, beta,
+                                      ts, fs, delta_fairness)
+            dc = nxt_cost - costs
+            # Clamped Metropolis exponent: pathological cost spikes (huge
+            # |dc| / tiny temp) stay finite instead of overflowing exp.
+            acc_p = jnp.exp(jnp.clip(-dc / jnp.maximum(temp, 1e-9),
+                                     -60.0, 0.0))
+            accept = moved & ((dc < 0.0) | (u < acc_p))
+            idx = jnp.where(accept[:, None], nxt, idx)
+            costs = jnp.where(accept, nxt_cost, costs)
+            better = costs < best_c
+            best_i = jnp.where(better[:, None], idx, best_i)
+            best_c = jnp.where(better, costs, best_c)
+            # Cooling advances even on masked (collision / no-free-device)
+            # steps, so the schedule stays consistent across chains and
+            # with the host path's skip semantics.
+            return (idx, costs, best_i, best_c, temp * cooling), None
+
+        carry0 = (init_idx, costs, init_idx, costs, t0)
+        (_, _, best_i, best_c, _), _ = jax.lax.scan(
+            body, carry0, (pos, cand, accept_u))
+        ci = jnp.argmin(best_c)
+        return best_i[ci], best_c[ci]
+
+    return jax.jit(run)
+
+
+def sa_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
+              available: np.ndarray, n_sel: int, *, alpha: float, beta: float,
+              time_scale: float, fairness_scale: float, delta_fairness: bool,
+              steps: int, chains: int, t0: float, cooling: float,
+              greedy_seed: bool = True,
+              avail_idx: Optional[np.ndarray] = None) -> np.ndarray:
+    """One fused multi-chain SA decision -> (K,) bool plan.
+
+    ``chains`` plans anneal in parallel for ``steps`` scan iterations
+    (``chains * steps`` cost evaluations in ONE jitted call); the best plan
+    any chain ever visited is returned. All randomness is pre-drawn from
+    ``rng`` on the host, so decisions are reproducible under the
+    scheduler's seed and the scan body is PRNG-free.
+    """
+    import jax.numpy as jnp
+
+    avail = np.asarray(available, dtype=bool)
+    if avail_idx is None:
+        avail_idx = np.flatnonzero(avail)
+    _check_avail(avail_idx, n_sel)
+    init = _init_indices(rng, avail_idx, n_sel, chains)
+    if greedy_seed:
+        init[0] = _greedy_indices(np.asarray(times), avail_idx, n_sel)
+    pos, cand, u = _swap_noise(rng, avail_idx, steps, chains, n_sel)
+    fn = _sa_fn(int(steps), int(chains), int(n_sel), bool(delta_fairness))
+    best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
+                     jnp.asarray(_center(counts)), jnp.asarray(pos),
+                     jnp.asarray(cand), jnp.asarray(u),
+                     jnp.float32(alpha), jnp.float32(beta),
+                     jnp.float32(time_scale), jnp.float32(fairness_scale),
+                     jnp.float32(t0), jnp.float32(cooling))
+    return plan_from_indices(avail.shape[0], np.asarray(best_idx))
+
+
+# ---- (b) fused genetic algorithm -----------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _ga_fn(population: int, generations: int, n_sel: int,
+           delta_fairness: bool):
+    import jax
+    import jax.numpy as jnp
+
+    P = population
+    half = P // 2
+    S = n_sel
+
+    def run(init_idx, times, counts_c, tourn_a, tourn_b, cross_u,
+            mut_u, mut_pos, mut_cand, alpha, beta, ts, fs, mutation_rate):
+        def body(carry, xs):
+            pop, best_i, best_c = carry
+            ta, tb, cu, mu, mpos, mcand = xs
+            cost = plan_costs_idx(times, counts_c, pop, alpha, beta, ts,
+                                  fs, delta_fairness)
+            i = jnp.argmin(cost)
+            better = cost[i] < best_c
+            best_i = jnp.where(better, pop[i], best_i)
+            best_c = jnp.where(better, cost[i], best_c)
+            # Tournament selection (size 2), whole population at once.
+            parents = jnp.where((cost[ta] <= cost[tb])[:, None],
+                                pop[ta], pop[tb])
+            # Slot-wise uniform crossover between consecutive parent pairs:
+            # slot j of a child takes the OTHER parent's j-th device iff
+            # the coin says swap and that device is a single (absent from
+            # this parent) — entries adopted from the other parent are
+            # then distinct from every kept entry, so children stay
+            # duplicate-free and exactly n_sel-sized with no repair/sort
+            # step (``lax.top_k`` costs ~1 ms/call on CPU and would
+            # dominate the loop). Unlike the host GA's bitwise crossover
+            # + repair, a shared device CAN be dropped when its slot swaps
+            # to a single — a deliberate trade for the sort-free form; the
+            # parity gate measures the outcome, not the operator. The two
+            # children use complementary coins, mirroring the host GA's
+            # shared crossover mask.
+            p0, p1 = parents[0:2 * half:2], parents[1:2 * half:2]
+            m0 = jnp.any(p0[:, :, None] == p1[:, None, :], axis=-1)
+            m1 = jnp.any(p1[:, :, None] == p0[:, None, :], axis=-1)
+            swap = cu < 0.5
+            c0 = jnp.where(swap & ~m1, p1, p0)
+            c1 = jnp.where(~swap & ~m0, p0, p1)
+            children = jnp.stack([c0, c1], axis=1).reshape(2 * half, S)
+            if P != 2 * half:  # odd population: last parent passes through
+                children = jnp.concatenate([children, parents[-1:]])
+            # Mutation: swap one selected device for one free device.
+            swapped, moved = _swap_into(children, mpos, mcand)
+            apply = (mu < mutation_rate) & moved
+            children = jnp.where(apply[:, None], swapped, children)
+            # Elitism: the best plan seen so far survives in slot 0.
+            children = children.at[0].set(best_i)
+            return (children, best_i, best_c), None
+
+        carry0 = (init_idx, init_idx[0], jnp.float32(jnp.inf))
+        (pop, best_i, best_c), _ = jax.lax.scan(
+            body, carry0,
+            (tourn_a, tourn_b, cross_u, mut_u, mut_pos, mut_cand))
+        cost = plan_costs_idx(times, counts_c, pop, alpha, beta, ts, fs,
+                              delta_fairness)
+        i = jnp.argmin(cost)
+        better = cost[i] < best_c
+        return (jnp.where(better, pop[i], best_i),
+                jnp.where(better, cost[i], best_c))
+
+    return jax.jit(run)
+
+
+def ga_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
+              available: np.ndarray, n_sel: int, *, alpha: float, beta: float,
+              time_scale: float, fairness_scale: float, delta_fairness: bool,
+              population: int, generations: int, mutation_rate: float,
+              greedy_seed: bool = True,
+              avail_idx: Optional[np.ndarray] = None) -> np.ndarray:
+    """One fused GA decision -> (K,) bool plan (all generations in ONE
+    jitted ``lax.scan`` call; index-form population, pre-drawn noise)."""
+    import jax.numpy as jnp
+
+    avail = np.asarray(available, dtype=bool)
+    if avail_idx is None:
+        avail_idx = np.flatnonzero(avail)
+    _check_avail(avail_idx, n_sel)
+    P, G = population, generations
+    init = _init_indices(rng, avail_idx, n_sel, P)
+    if greedy_seed:
+        init[0] = _greedy_indices(np.asarray(times), avail_idx, n_sel)
+    tourn = rng.integers(0, P, (2, G, P)).astype(np.int32)
+    half = P // 2
+    cross_u = rng.random((G, half, n_sel)).astype(np.float32)
+    mut_u = rng.random((G, P)).astype(np.float32)
+    mut_pos, mut_cand, _ = _swap_noise(rng, avail_idx, G, P, n_sel)
+    fn = _ga_fn(int(P), int(G), int(n_sel), bool(delta_fairness))
+    best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
+                     jnp.asarray(_center(counts)), jnp.asarray(tourn[0]),
+                     jnp.asarray(tourn[1]), jnp.asarray(cross_u),
+                     jnp.asarray(mut_u),
+                     jnp.asarray(mut_pos), jnp.asarray(mut_cand),
+                     jnp.float32(alpha), jnp.float32(beta),
+                     jnp.float32(time_scale), jnp.float32(fairness_scale),
+                     jnp.float32(mutation_rate))
+    return plan_from_indices(avail.shape[0], np.asarray(best_idx))
+
+
+# ---- (c) batched BODS acquisition ----------------------------------------
+
+
+def ei_scores(F, resid, valid, cand_feats, cand_est, noise):
+    """Expected Improvement under the masked Matern-5/2 GP posterior.
+
+    Traced core shared by the host BODS scheduler (which jits it directly),
+    the fused acquisition below (which inlines it into one decision graph),
+    and ``ei_scores_jobs`` (which vmaps it over the job axis). See
+    ``schedulers/bods.py`` for the modelling rationale (residual GP over a
+    low-dimensional feature map, plugin incumbent within the round; the
+    prior mean enters through ``cand_est``, so the observations' own
+    estimates never appear here).
+
+    F: (L, d) observed features; resid: (L,) realized-estimated residuals
+    (normalized); valid: (L,) ring mask; cand_feats: (P, d);
+    cand_est: (P,) estimated candidate costs (same normalization as
+    ``resid``). Returns (P,) EI (higher = better).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    m = valid.astype(jnp.float32)
+    mm = m[:, None] * m[None, :]
+
+    def matern52(sq):
+        r = jnp.sqrt(jnp.maximum(sq, 1e-12))
+        return (1.0 + jnp.sqrt(5.0) * r + 5.0 * sq / 3.0) * jnp.exp(-jnp.sqrt(5.0) * r)
+
+    d_nn = jnp.sum((F[:, None, :] - F[None, :, :]) ** 2, -1)
+    K_nn = matern52(d_nn) * mm + (1.0 - mm) * jnp.eye(F.shape[0])
+    K_nn = K_nn + (noise + 1e-6) * jnp.eye(F.shape[0])
+
+    d_nc = jnp.sum((F[:, None, :] - cand_feats[None, :, :]) ** 2, -1)
+    K_nc = matern52(d_nc) * m[:, None]
+
+    chol = jnp.linalg.cholesky(K_nn)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), resid * m)
+    mu_c = cand_est + K_nc.T @ alpha          # posterior mean, candidates
+    v = jax.scipy.linalg.solve_triangular(chol, K_nc, lower=True)
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
+    sigma = jnp.sqrt(var)
+
+    # WITHIN-ROUND plugin incumbent (see bods.py): the best posterior-mean
+    # candidate of THIS round; EI arbitrates exploitation vs exploration
+    # among the current feasible set.
+    best = jnp.min(mu_c)
+    z = (best - mu_c) / sigma
+    cdf = jax.scipy.stats.norm.cdf(z)
+    pdf = jax.scipy.stats.norm.pdf(z)
+    return (best - mu_c) * cdf + sigma * pdf
+
+
+@functools.lru_cache(maxsize=None)
+def _ei_scores_jobs_fn():
+    import jax
+
+    return jax.jit(jax.vmap(ei_scores, in_axes=(0, 0, 0, 0, 0, None)))
+
+
+def ei_scores_jobs(F, resid, valid, cand_feats, cand_est, noise):
+    """EI for ALL M jobs in one call: every argument except ``noise`` gains
+    a leading (M,) axis (each job's observation ring + candidate set); the
+    Matern-GP posterior is vmapped over jobs instead of looped in Python.
+    Returns (M, P) EI scores."""
+    import jax.numpy as jnp
+
+    return _ei_scores_jobs_fn()(
+        jnp.asarray(F), jnp.asarray(resid),
+        jnp.asarray(valid), jnp.asarray(cand_feats), jnp.asarray(cand_est),
+        jnp.asarray(noise, jnp.float32))
+
+
+def _norm01_traced(x, mask):
+    """Traced twin of ``bods._norm01``: [0, 1]-normalize by the spread over
+    ``mask``; a flat (or empty) reference set yields all-zeros, never NaN."""
+    import jax.numpy as jnp
+
+    lo = jnp.min(jnp.where(mask, x, jnp.inf))
+    hi = jnp.max(jnp.where(mask, x, -jnp.inf))
+    spread = hi - lo
+    ok = jnp.isfinite(spread) & (spread >= 1e-9)
+    safe = jnp.where(ok, spread, 1.0)
+    return jnp.where(ok, jnp.clip((x - lo) / safe, 0.0, 1.0), 0.0)
+
+
+def featurize_plans(times, counts_c, counts_zero, mu, plans, ts, fs,
+                    n_sel: int, delta_fairness: bool):
+    """Traced phi(V): (P, K) plans -> (P, 6) features, formula-for-formula
+    the host ``BODSScheduler._featurize`` (est round time, fairness
+    increment, mean selected time, capability-jitter exposure, novelty,
+    occupancy — all O(1)-normalized). Also returns the normalized time and
+    fairness terms so the caller can assemble Formula-2 estimates without
+    a second pass."""
+    import jax.numpy as jnp
+
+    K = plans.shape[1]
+    sel_t = jnp.where(plans, times, 0.0)
+    t, n, wsum = _dense_stats(times, counts_c, plans)
+    est_time = t / ts
+    dfair = _fairness_from_stats(counts_c, n, wsum, delta_fairness) / fs
+    nn = jnp.maximum(n, 1.0)
+    mean_t = jnp.sum(sel_t, axis=1) / nn / ts
+    jitter = jnp.max(
+        jnp.where(plans, times / jnp.maximum(mu, 1e-9), 0.0), axis=1) / ts
+    novelty = jnp.sum(plans & counts_zero[None, :], axis=1) / max(n_sel, 1)
+    occupancy = n / float(K)
+    feats = jnp.stack([est_time, dfair, mean_t, jitter, novelty, occupancy],
+                      axis=1).astype(jnp.float32)
+    return feats, est_time, dfair
+
+
+@functools.lru_cache(maxsize=None)
+def _bods_fn(num_candidates: int, n_mut: int, n_sel: int,
+             delta_fairness: bool, local_search: bool):
+    import jax
+    import jax.numpy as jnp
+
+    P = num_candidates
+    n_rand = P // 4
+    n_str = P - n_rand
+
+    def run(key, times, counts_c, counts_zero, avail, mu, mutants,
+            use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs, noise):
+        K = times.shape[0]
+        k_rand, k_w1, k_w2, k_str, k_rep = jax.random.split(key, 5)
+        # Candidate generation: random + structured Gumbel top-k.
+        rand = _gumbel_plans(k_rand, jnp.zeros((n_rand, K)), avail, n_sel)
+        t_norm = _norm01_traced(times, avail)
+        c_norm = _norm01_traced(counts_c, jnp.ones(K, bool))
+        w_time = jax.random.uniform(k_w1, (n_str, 1), minval=0.0, maxval=6.0)
+        w_fair = jax.random.uniform(k_w2, (n_str, 1), minval=0.0, maxval=4.0)
+        logits = -w_time * t_norm[None, :] - w_fair * c_norm[None, :]
+        cands = jnp.concatenate([rand, _gumbel_plans(k_str, logits, avail,
+                                                     n_sel)])
+        if local_search:
+            # Host-prepared mutants of the best observed plan, repaired onto
+            # the feasible set in-graph; they overwrite the first n_mut
+            # random slots exactly like the host path.
+            fixed = repair_plans_jax(k_rep, mutants, avail, n_sel)
+            keep = use_base & jnp.ones((n_mut, 1), bool)
+            cands = cands.at[:n_mut].set(
+                jnp.where(keep, fixed, cands[:n_mut]))
+        feats, est_time, dfair = featurize_plans(
+            times, counts_c, counts_zero, mu, cands, ts, fs, n_sel,
+            delta_fairness)
+        cand_est = alpha * est_time + beta * dfair
+        ei = ei_scores(F, resid, valid, feats, cand_est * inv_sd, noise)
+        choice = jnp.argmax(ei)
+        return cands[choice], cand_est[choice]
+
+    return jax.jit(run)
+
+
+def _mutate_plan_host(rng: np.random.Generator, base: np.ndarray,
+                      n_mut: int) -> np.ndarray:
+    """Host twin of the BODS local-search proposal: n_mut copies of
+    ``base``, each with 1-3 selected-for-unselected swaps (identical to the
+    host scheduler's mutation loop; availability is restored in-graph by
+    the vectorized repair)."""
+    K = base.shape[0]
+    mutants = np.broadcast_to(base, (n_mut, K)).copy()
+    for i in range(n_mut):
+        flips = rng.integers(1, 4)
+        on, off = np.flatnonzero(mutants[i]), np.flatnonzero(~mutants[i])
+        for _ in range(flips):
+            if on.size and off.size:
+                mutants[i][rng.choice(on)] = False
+                mutants[i][rng.choice(off)] = True
+    return mutants
+
+
+def bods_acquire(rng: np.random.Generator, times: np.ndarray,
+                 counts: np.ndarray, available: np.ndarray, mu: np.ndarray,
+                 n_sel: int, *, F: np.ndarray, y: np.ndarray,
+                 est: np.ndarray, valid: np.ndarray,
+                 base_plan: Optional[np.ndarray], alpha: float, beta: float,
+                 time_scale: float, fairness_scale: float,
+                 delta_fairness: bool, num_candidates: int, n_mut: int,
+                 local_search: bool, gp_noise: float,
+                 avail_idx: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, float]:
+    """One fused BODS decision: (chosen (K,) bool plan, its estimated cost).
+
+    Candidate generation, featurization, GP posterior and EI argmax run in
+    one jitted call; only the observation-ring slicing, the residual
+    normalization and the tiny local-search mutant loop stay on the host.
+    The in-graph Gumbel draws use the fast ``rbg`` PRNG (the (P, K) noise
+    block is the one unavoidable K-wide draw in this module).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    avail = np.asarray(available, dtype=bool)
+    if avail_idx is None:
+        avail_idx = np.flatnonzero(avail)
+    _check_avail(avail_idx, n_sel)
+    sd = float(y[valid > 0].std()) + 1e-6 if valid.sum() else 1.0
+    use_base = base_plan is not None and local_search
+    if use_base:
+        mutants = _mutate_plan_host(rng, np.asarray(base_plan, dtype=bool),
+                                    n_mut)
+    else:
+        mutants = np.zeros((n_mut, avail.shape[0]), dtype=bool)
+    fn = _bods_fn(int(num_candidates), int(n_mut), int(n_sel),
+                  bool(delta_fairness), bool(local_search))
+    key = jax.random.key(int(rng.integers(0, 2**31 - 1)), impl="rbg")
+    plan, cand_est = fn(
+        key, jnp.asarray(times, jnp.float32), jnp.asarray(_center(counts)),
+        jnp.asarray(np.asarray(counts) == 0), jnp.asarray(avail),
+        jnp.asarray(mu, jnp.float32), jnp.asarray(mutants),
+        jnp.asarray(bool(use_base)), jnp.asarray(F),
+        jnp.asarray((y - est) / sd * valid, jnp.float32),
+        jnp.asarray(valid, jnp.float32), jnp.float32(1.0 / sd),
+        jnp.float32(alpha), jnp.float32(beta), jnp.float32(time_scale),
+        jnp.float32(fairness_scale), jnp.float32(gp_noise))
+    return np.asarray(plan), float(cand_est)

@@ -9,8 +9,11 @@
 strings allowed); ``--set k=v`` overrides top-level ExperimentSpec fields on
 the materialized spec — including the policy axis (``--set policy=<name>``
 loads a gym-trained scheduler policy from the zoo; train one with
-``python -m repro.gym train``). A saved result's ``spec`` block is itself a
-valid input to ``run`` — benchmark outputs are replayable.
+``python -m repro.gym train``) and the search-backend axis
+(``--set search_backend=host|fused`` flips the SA/genetic/BODS plan search
+between the jitted on-device loops and the sequential numpy reference;
+see ``benchmarks/bench_sched.py``). A saved result's ``spec`` block is
+itself a valid input to ``run`` — benchmark outputs are replayable.
 """
 
 from __future__ import annotations

@@ -110,7 +110,8 @@ def real_fl_two_job(scheduler: str = "bods", rounds: int = 15,
 @register_preset("fleet-scale")
 def fleet_scale(scheduler: str = "bods", num_devices: int = 10_000,
                 n_sel: int = None, candidates: int = 512,
-                scoring_backend: str = "jax", n_jobs: int = 2,
+                scoring_backend: str = "jax",
+                search_backend: str = "fused", n_jobs: int = 2,
                 max_rounds: int = 5, seed: int = 1) -> ExperimentSpec:
     """Beyond-paper scale regime: a cross-device fleet of 10k-100k devices
     (cf. Liu et al., arXiv:2211.13430) scheduled through the batched
@@ -125,7 +126,8 @@ def fleet_scale(scheduler: str = "bods", num_devices: int = 10_000,
         pool=PoolSpec(seed=seed),
         fleet=FleetSpec(num_devices=num_devices, n_sel=n_sel,
                         candidates=candidates,
-                        scoring_backend=scoring_backend),
+                        scoring_backend=scoring_backend,
+                        search_backend=search_backend),
         scheduler=scheduler, runtime="synthetic",
         runtime_kwargs={"seed": 2})
 

@@ -2,8 +2,10 @@
 
 A spec is a frozen, JSON-round-trippable description of a complete multi-job
 federated-learning experiment: the jobs, the device pool, the cost-model
-coefficients, the scheduler (by registry name), the runtime (``synthetic``
-closed-form convergence or ``real_fl`` actual JAX training), the training
+coefficients, the scheduler (by registry name) and its search backend
+(``search_backend``: fused on-device search loops vs the host reference),
+the runtime (``synthetic`` closed-form convergence or ``real_fl`` actual
+JAX training), the training
 execution knobs (``TrainSpec``: fused engine, cohort buckets, eval cadence),
 the fault/straggler/queueing knobs of the engine, and the ``policy`` axis
 (a policy-zoo entry name that warm-starts the scheduler — e.g. a gym-trained
@@ -127,19 +129,23 @@ class CostSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """Fleet-scale axis: pool size, candidate count, and scoring backend.
+    """Fleet-scale axis: pool size, candidate count, and backends.
 
     ``num_devices``/``n_sel`` override the pool/engine sizing when set
     (so one preset sweeps K without re-deriving the rest of the spec);
     ``candidates`` overrides the candidate-set size of searching schedulers
     (BODS/DNN ``num_candidates``, genetic ``population``); ``scoring_backend``
-    selects the plan-scoring path: ``numpy | jax | pallas | auto``.
+    selects the plan-scoring path: ``numpy | jax | pallas | auto``;
+    ``search_backend`` selects the plan-SEARCH path of the searching
+    schedulers (SA/genetic/BODS): ``fused`` (jitted on-device loops,
+    ``repro.core.search``) or ``host`` (the sequential numpy reference).
     """
 
     num_devices: Optional[int] = None
     n_sel: Optional[int] = None
     candidates: Optional[int] = None
     scoring_backend: str = "auto"
+    search_backend: str = "fused"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,10 +179,11 @@ class ExperimentSpec:
     pool: PoolSpec = PoolSpec()
     cost: CostSpec = CostSpec()
     fleet: FleetSpec = FleetSpec()
-    # Convenience alias for fleet.scoring_backend (wins when set), so
-    # ``ExperimentSpec(..., scoring_backend="jax")`` and
-    # ``--set scoring_backend=jax`` work without nesting.
+    # Convenience aliases for fleet.scoring_backend / fleet.search_backend
+    # (they win when set), so ``ExperimentSpec(..., scoring_backend="jax")``
+    # and ``--set search_backend=host`` work without nesting.
     scoring_backend: Optional[str] = None
+    search_backend: Optional[str] = None
     scheduler: str = "random"
     scheduler_seed: int = 0
     scheduler_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -217,19 +224,29 @@ class ExperimentSpec:
     def effective_scoring_backend(self) -> str:
         return self.scoring_backend or self.fleet.scoring_backend
 
-    def _candidate_kwargs(self) -> Dict[str, int]:
-        """Map fleet.candidates onto the scheduler's own knob, if it has one."""
-        if self.fleet.candidates is None:
-            return {}
+    def effective_search_backend(self) -> str:
+        return self.search_backend or self.fleet.search_backend
+
+    def _scheduler_params(self):
         import inspect
 
         factory = SCHEDULERS.get(self.scheduler)
         fn = factory.__init__ if inspect.isclass(factory) else factory
-        params = inspect.signature(fn).parameters
-        for knob in ("num_candidates", "population"):
-            if knob in params:
-                return {knob: int(self.fleet.candidates)}
-        return {}
+        return inspect.signature(fn).parameters
+
+    def _candidate_kwargs(self) -> Dict[str, Any]:
+        """Map fleet.candidates / the search-backend axis onto the
+        scheduler's own knobs, where it has them."""
+        params = self._scheduler_params()
+        out: Dict[str, Any] = {}
+        if "search_backend" in params:
+            out["search_backend"] = self.effective_search_backend()
+        if self.fleet.candidates is not None:
+            for knob in ("num_candidates", "population"):
+                if knob in params:
+                    out[knob] = int(self.fleet.candidates)
+                    break
+        return out
 
     def build(self) -> "Experiment":
         jobs = [js.to_job_config(i) for i, js in enumerate(self.jobs)]

