@@ -42,6 +42,7 @@ class DevicePool:
         if self.busy_until is None:
             self.busy_until = np.zeros(self.num_devices, dtype=np.float64)
         self._soa_src = None  # SoA caches build lazily (data_sizes may be rescaled)
+        self._version = 0     # bumped on every invalidation (churn detection)
 
     # ---- constructors ----
 
@@ -73,10 +74,71 @@ class DevicePool:
     # ---- structure-of-arrays fast path ----
 
     def invalidate(self) -> None:
-        """Drop the SoA caches. Needed only after IN-PLACE mutation of
-        ``a``/``mu``/``data_sizes`` (replacing ``data_sizes`` wholesale is
-        detected automatically)."""
+        """Drop the SoA caches (``_base``/``_shift``/``_scale`` and the
+        per-(job, tau) ``_exp_cache``/``_shift_cache`` memo tables). Needed
+        after IN-PLACE mutation of ``a``/``mu``/``data_sizes`` (replacing
+        ``data_sizes`` wholesale is detected automatically). The churn
+        mutators below (``set_capabilities``/``add_job``/``rejoin``) call
+        this themselves — use them instead of raw attribute writes and the
+        caches can never go stale."""
         self._soa_src = None
+        self._version += 1
+
+    @property
+    def version(self) -> int:
+        """Monotone cache-generation counter: bumped every time the time
+        model mutates (coefficient churn, job admission). Consumers holding
+        derived arrays (scheduler services, plan caches) compare versions
+        instead of re-deriving per round."""
+        return self._version
+
+    # ---- churn mutators (the invalidation hooks) ----
+
+    def set_capabilities(self, device_ids, a=None, mu=None) -> None:
+        """Mutate per-device capability coefficients in place and drop every
+        derived cache. This is the supported way to model capability churn
+        (thermal throttling, a rejoining device on a different network):
+        writing ``pool.a[...]`` directly leaves ``_exp_cache`` serving the
+        pre-churn time model."""
+        ids = np.asarray(device_ids)
+        if a is not None:
+            self.a[ids] = a
+        if mu is not None:
+            self.mu[ids] = mu
+        self.invalidate()
+
+    def add_job(self, data_sizes: Optional[np.ndarray] = None) -> int:
+        """Append one job column to ``data_sizes`` (dynamic job admission);
+        returns the new job index. ``data_sizes`` defaults to a fresh draw
+        from the range of the existing columns."""
+        K = self.num_devices
+        if data_sizes is None:
+            if self.num_jobs == 0:
+                raise ValueError("add_job on a 0-job pool needs explicit "
+                                 "data_sizes (no range to draw from)")
+            lo, hi = float(self.data_sizes.min()), float(self.data_sizes.max())
+            data_sizes = self.rng.uniform(lo, hi, K)
+        col = np.asarray(data_sizes, dtype=np.float64).reshape(K, 1)
+        self.data_sizes = np.concatenate([self.data_sizes, col], axis=1)
+        self.invalidate()  # new array is auto-detected; bump version anyway
+        return self.num_jobs - 1
+
+    def set_job_data(self, job: int, data_sizes: np.ndarray) -> None:
+        """Overwrite one job's data-size column (and invalidate)."""
+        self.data_sizes[:, job] = np.asarray(data_sizes, dtype=np.float64)
+        self.invalidate()
+
+    def depart(self, device_ids) -> None:
+        """Membership churn: device(s) leave the fleet until ``rejoin``
+        (identical occupancy semantics to a permanent fault)."""
+        self.fail(device_ids, until=np.inf)
+
+    def rejoin(self, device_ids, a=None, mu=None) -> None:
+        """Departed device(s) return, optionally with drifted capability
+        coefficients (cache invalidation included)."""
+        if a is not None or mu is not None:
+            self.set_capabilities(device_ids, a=a, mu=mu)
+        self.recover(device_ids)
 
     def _ensure_soa(self) -> None:
         """(Re)build the per-job coefficient arrays; invalidates automatically

@@ -92,6 +92,20 @@ class JobState:
     done: bool = False
     reached_target_at: Optional[float] = None
     total_round_time: float = 0.0  # Σ_r T_m^r (Formula 6 numerator)
+    # Online-service lifecycle (dynamic job sets): when the job was admitted
+    # to the engine, and whether/when it was retired EARLY (tenant departure
+    # — distinct from finishing by target/max_rounds).
+    admitted_at: float = 0.0
+    retired: bool = False
+    retired_at: Optional[float] = None
+    # Set once the job enters the event loop (in flight or retry pending);
+    # run() skips launched jobs so mixing manual launches / dynamic
+    # admission with a later run() never double-books a job's events.
+    launched: bool = False
+    # Catalogue rows: the scheduler service builds the engine from a spec
+    # whose jobs are tenant TEMPLATES, never run directly; parked jobs are
+    # skipped by run()/summary().
+    parked: bool = False
 
 
 class MultiJobEngine:
@@ -140,6 +154,11 @@ class MultiJobEngine:
         self.rng = rng or np.random.default_rng(12345)
         self.counts = np.zeros((len(jobs), pool.num_devices))  # S_m (Formula 16)
         self.records: List[RoundRecord] = []
+        self.clock = 0.0  # latest processed simulated instant
+        # Optional hook for online drivers (the scheduler service): called as
+        # ``on_job_done(job, now)`` when a job completes (target reached,
+        # max_rounds, or abandoned) — the admission-slot release signal.
+        self.on_job_done: Optional[Callable[[int, float], None]] = None
         self._heap: list = []
         self._seq = 0
         self._in_flight: Dict[int, dict] = {}
@@ -181,6 +200,11 @@ class MultiJobEngine:
 
     def _launch(self, job: int, now: float) -> None:
         js = self.jobs[job]
+        if js.done:
+            # Retired (or parked) while a retry event was pending: the
+            # stale event must not resurrect the job.
+            return
+        js.launched = True
         ctx = self._make_ctx(job, now)
         # Populate the context's per-round available-id cache here: the
         # availability-independent derived arrays (float32 time mirror,
@@ -305,18 +329,83 @@ class MultiJobEngine:
             js.done = True
         return js.done
 
+    # ---- dynamic job set (online multi-tenant service) ----
+
+    def add_job(self, config: JobConfig,
+                data_sizes: Optional[np.ndarray] = None,
+                now: Optional[float] = None,
+                launch: bool = True,
+                runtime_kwargs: Optional[dict] = None) -> int:
+        """Admit a NEW job mid-run: grow the pool's data-size columns, the
+        fairness-count matrix, the scheduler's per-job state, and the
+        runtime's per-job rows, then (if ``now`` is given and ``launch``)
+        launch its first round at that simulated instant. ``launch=False``
+        defers the first round so the caller can load warm scheduler state
+        (a readmitted tenant) before any decision is made.
+
+        ``data_sizes``: the tenant's (K,) per-device data profile; None
+        draws a fresh column from the pool's existing range. The runtime
+        must expose ``add_job(job_id, config, **runtime_kwargs)`` —
+        ``SyntheticRuntime`` does; training runtimes with preallocated
+        device-resident datasets do not (yet) support dynamic admission.
+        """
+        job_id = len(self.jobs)
+        config = dataclasses.replace(config, job_id=job_id)
+        if self.pool.num_jobs <= job_id:
+            self.pool.add_job(data_sizes)
+        elif data_sizes is not None:
+            self.pool.set_job_data(job_id, data_sizes)
+        self.counts = np.concatenate(
+            [self.counts, np.zeros((1, self.pool.num_devices))])
+        self.jobs.append(JobState(
+            config=config,
+            admitted_at=float(now) if now is not None else self.clock))
+        self.scheduler.ensure_jobs(len(self.jobs))
+        add = getattr(self.runtime, "add_job", None)
+        if add is None:
+            raise TypeError(
+                f"runtime {type(self.runtime).__name__} does not support "
+                "dynamic job admission (no add_job hook)")
+        add(job_id, config, **(runtime_kwargs or {}))
+        if now is not None and launch:
+            self._launch(job_id, float(now))
+        return job_id
+
+    def launch_job(self, job: int, now: float) -> None:
+        """Launch the first round of a job admitted with ``launch=False``."""
+        self._launch(job, float(now))
+
+    def retire_job(self, job: int, now: Optional[float] = None) -> bool:
+        """Retire a job EARLY (tenant departure). An in-flight round runs to
+        its finish event (its devices are already committed and its metrics
+        still count); nothing is launched afterwards — pending retry events
+        die against the ``done`` guard. Returns False if the job had already
+        finished."""
+        js = self.jobs[job]
+        if js.done:
+            return False
+        js.done = True
+        js.retired = True
+        js.retired_at = float(now) if now is not None else self.clock
+        return True
+
     # ---- main loop ----
 
-    def run(self, verbose: bool = False,
-            on_round: Optional[Callable[[RoundRecord], None]] = None) -> List[RoundRecord]:
-        for m in range(len(self.jobs)):
-            self._launch(m, 0.0)
-        while self._heap:
+    def advance_until(self, until: float, verbose: bool = False,
+                      on_round: Optional[Callable[[RoundRecord], None]] = None
+                      ) -> int:
+        """Process every queued engine event with timestamp <= ``until``
+        (the bounded event loop online drivers interleave with external
+        traffic events); returns the number of completed rounds."""
+        finished = 0
+        while self._heap and self._heap[0][0] <= until:
             now, _, kind, job = heapq.heappop(self._heap)
+            self.clock = max(self.clock, now)
             if kind == "retry":
                 self._launch(job, now)
                 continue
             done = self._finish(job, now)
+            finished += 1
             if on_round is not None:
                 on_round(self.records[-1])
             if verbose:
@@ -325,6 +414,16 @@ class MultiJobEngine:
                       f"acc={r.accuracy:.4f} loss={r.loss:.4f} T={r.round_time:.1f}s")
             if not done:
                 self._launch(job, now)
+            elif self.on_job_done is not None:
+                self.on_job_done(job, now)
+        return finished
+
+    def run(self, verbose: bool = False,
+            on_round: Optional[Callable[[RoundRecord], None]] = None) -> List[RoundRecord]:
+        for m in range(len(self.jobs)):
+            if not self.jobs[m].done and not self.jobs[m].launched:
+                self._launch(m, 0.0)
+        self.advance_until(np.inf, verbose=verbose, on_round=on_round)
         return self.records
 
     # ---- summary (paper Tables 1/2/5 quantities) ----
@@ -332,12 +431,16 @@ class MultiJobEngine:
     def summary(self) -> Dict[str, dict]:
         out = {}
         for m, js in enumerate(self.jobs):
+            if js.parked:
+                continue  # tenant templates, never executed
             recs = [r for r in self.records if r.job == m]
             key = js.config.model.name
             if key in out:
                 key = f"{key}#{m}"
             # All fields must be well-defined for jobs with ZERO completed
-            # rounds (abandoned before first finish, or clamped away).
+            # rounds (abandoned before first finish, or clamped away) — and
+            # lifetimes are UNEQUAL under dynamic admission, so every
+            # per-job quantity derives from that job's own records only.
             out[key] = dict(
                 rounds=js.round_idx,
                 final_accuracy=recs[-1].accuracy if recs else 0.0,
@@ -347,5 +450,7 @@ class MultiJobEngine:
                 mean_round_time=(js.total_round_time / js.round_idx
                                  if js.round_idx else 0.0),
                 makespan=recs[-1].t_end if recs else 0.0,
+                admitted_at=js.admitted_at,
+                retired=js.retired,
             )
         return out

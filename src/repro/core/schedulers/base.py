@@ -88,6 +88,49 @@ class SchedulerBase(abc.ABC):
     def observe(self, ctx: SchedulingContext, plan: np.ndarray, realized_cost: float) -> None:
         """Feedback after the round really ran (default: no-op)."""
 
+    # ---- persistence / warm hand-off -------------------------------------
+    #
+    # Every scheduler participates in the policy-zoo and scheduler-service
+    # persistence protocols. The closed-form schedulers (random/greedy/
+    # FedCS/SA/genetic) have no learned state, so the defaults are empty;
+    # the learners (BODS/RLDS/DNN) override with their rings/params.
+
+    def state_dict(self) -> dict:
+        """Learned state as a checkpointable pytree (default: stateless)."""
+        return {}
+
+    def load_state_dict(self, tree: dict) -> None:
+        """Restore learned state (default: no-op)."""
+
+    def snapshot(self) -> dict:
+        """FULL in-memory snapshot: ``state_dict`` plus the host PRNG state.
+        Unlike the zoo-persisted ``state_dict`` (portable, array-only), a
+        snapshot pins the numpy Generator too, so ``restore`` reproduces the
+        next decision bit-for-bit — the scheduler-service warm hand-off
+        across a retire/readmit cycle."""
+        return {"state": self.state_dict(),
+                "rng": self.rng.bit_generator.state}
+
+    def restore(self, snap: dict) -> None:
+        self.load_state_dict(snap["state"])
+        self.rng.bit_generator.state = snap["rng"]
+
+    # ---- dynamic job set -------------------------------------------------
+
+    def ensure_jobs(self, num_jobs: int) -> None:
+        """Grow per-job state to ``num_jobs`` rows (dynamic job admission —
+        the engine calls this from ``add_job``). Default: no per-job state."""
+
+    def job_state_dict(self, job: int) -> dict:
+        """Per-job learned state (a retiring tenant's slice), for warm
+        hand-off when the tenant is readmitted under a NEW job id. Default:
+        nothing job-specific."""
+        return {}
+
+    def load_job_state(self, job: int, tree: dict) -> None:
+        """Restore one job's slice saved by ``job_state_dict`` (default:
+        no-op)."""
+
     # Shared helper: batch-estimate candidate TotalCosts under the context.
     def _cost_of(self, ctx: SchedulingContext, plans: np.ndarray) -> np.ndarray:
         return self.cost_model.total_cost_batch(

@@ -124,6 +124,54 @@ class BODSScheduler(SchedulerBase):
         self._head = np.asarray(tree["head"], int)
         self._initialized = np.asarray(tree["initialized"], bool)
 
+    # ---- dynamic job set (scheduler service) ----
+
+    def ensure_jobs(self, num_jobs: int) -> None:
+        """Grow the per-job observation rings to ``num_jobs`` rows (newly
+        admitted jobs start with an empty, uninitialized ring)."""
+        M = self._F.shape[0]
+        if num_jobs <= M:
+            return
+        n = num_jobs - M
+
+        def grow(arr):
+            pad = np.zeros((n,) + arr.shape[1:], dtype=arr.dtype)
+            return np.concatenate([arr, pad], axis=0)
+
+        self._F = grow(self._F)
+        self._plans = grow(self._plans)
+        self._y = grow(self._y)
+        self._est = grow(self._est)
+        self._valid = grow(self._valid)
+        self._head = np.concatenate([self._head, np.zeros(n, dtype=int)])
+        self._initialized = np.concatenate(
+            [self._initialized, np.zeros(n, dtype=bool)])
+
+    def job_state_dict(self, job: int) -> dict:
+        """One job's GP observation ring — a retiring tenant's history."""
+        return {"F": self._F[job].copy(), "plans": self._plans[job].copy(),
+                "y": self._y[job].copy(), "est": self._est[job].copy(),
+                "valid": self._valid[job].copy(),
+                "head": int(self._head[job]),
+                "initialized": bool(self._initialized[job])}
+
+    def load_job_state(self, job: int, tree: dict) -> None:
+        """Restore a tenant's ring under its NEW job id (warm hand-off: a
+        readmitted tenant resumes with its observation history instead of
+        re-bootstrapping ``init_points`` fresh cost evaluations)."""
+        plans = np.asarray(tree["plans"], bool)
+        if plans.shape != self._plans.shape[1:]:
+            raise ValueError(
+                f"BODS per-job ring shape {plans.shape} does not match "
+                f"this pool's {self._plans.shape[1:]}")
+        self._F[job] = np.asarray(tree["F"], np.float32)
+        self._plans[job] = plans
+        self._y[job] = np.asarray(tree["y"], np.float32)
+        self._est[job] = np.asarray(tree["est"], np.float32)
+        self._valid[job] = np.asarray(tree["valid"], np.float32)
+        self._head[job] = int(tree["head"])
+        self._initialized[job] = bool(tree["initialized"])
+
     # ---- plan featurization φ(V) ----
 
     def _featurize(self, ctx: SchedulingContext, plans: np.ndarray) -> np.ndarray:

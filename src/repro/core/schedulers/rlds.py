@@ -188,6 +188,21 @@ class RLDSScheduler(SchedulerBase):
         self._adv_scale = float(np.asarray(tree["adv_scale"]))
         self._pretrained = bool(np.asarray(tree["pretrained"]))
 
+    # ---- dynamic job set (scheduler service) ----
+
+    def ensure_jobs(self, num_jobs: int) -> None:
+        """Grow the per-job baseline vector (policy params are shared across
+        jobs, so a newly admitted job only needs a fresh unset baseline)."""
+        if num_jobs > self.baselines.shape[0]:
+            pad = np.full(num_jobs - self.baselines.shape[0], np.nan)
+            self.baselines = np.concatenate([self.baselines, pad])
+
+    def job_state_dict(self, job: int) -> dict:
+        return {"baseline": float(self.baselines[job])}
+
+    def load_job_state(self, job: int, tree: dict) -> None:
+        self.baselines[job] = float(tree["baseline"])
+
     # ---- features ----
 
     def _features(self, ctx: SchedulingContext) -> np.ndarray:

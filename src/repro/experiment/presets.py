@@ -18,7 +18,8 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 from repro.experiment.registry import Registry
-from repro.experiment.spec import ExperimentSpec, FleetSpec, JobSpec, PoolSpec
+from repro.experiment.spec import (ArrivalsSpec, ExperimentSpec, FleetSpec,
+                                   JobSpec, PoolSpec)
 
 PRESETS = Registry("preset")
 register_preset = PRESETS.register
@@ -146,6 +147,35 @@ def rlds_warmstart(policy: str = "rlds-default",
                       seed=seed)
     return spec.replace(name=f"rlds-warmstart-{policy}", policy=policy,
                         policy_dir=policy_dir)
+
+
+@register_preset("online-smoke")
+def online_smoke(scheduler: str = "bods", num_devices: int = 60,
+                 horizon: float = 20_000.0, interarrival: float = 900.0,
+                 max_concurrent: int = 3, seed: int = 1) -> ExperimentSpec:
+    """Online multi-tenant scheduler service in the small: a 2-template
+    tenant catalogue served under Poisson arrivals with tenant departures,
+    probabilistic readmission (the warm hand-off path), and device churn
+    with capability drift — ``python -m repro.serve --preset online-smoke``.
+    Jobs are short (max_rounds) so arrivals genuinely interleave with
+    completions inside the horizon."""
+    jobs = (
+        JobSpec(name="small", target_metric=0.95, max_rounds=12,
+                local_epochs=3, convergence_rate=0.20),
+        JobSpec(name="large", target_metric=0.95, max_rounds=20,
+                local_epochs=5, convergence_rate=0.10),
+    )
+    return ExperimentSpec(
+        name=f"online-smoke-{scheduler}",
+        jobs=jobs, pool=PoolSpec(num_devices=num_devices, seed=seed),
+        scheduler=scheduler, runtime="synthetic",
+        runtime_kwargs={"seed": 2}, n_sel=max(1, num_devices // 10),
+        arrivals=ArrivalsSpec(
+            seed=seed, horizon=horizon, interarrival=interarrival,
+            mean_lifetime=2_500.0, readmit_prob=0.5,
+            max_concurrent=max_concurrent,
+            churn_interarrival=4_000.0, churn_fraction=0.05,
+            rejoin_after=2_000.0, drift=1.3))
 
 
 @register_preset("fault-injection")

@@ -170,6 +170,39 @@ class TrainSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalsSpec:
+    """Online traffic axis (the ``repro.serve`` scheduler service): dynamic
+    job arrivals/departures and device churn over a simulated horizon.
+
+    With this axis set, ``spec.jobs`` becomes a catalogue of tenant TEMPLATES
+    — the service instantiates a fresh job per arrival (template chosen by
+    the trace) instead of running the catalogue directly. ``mode="poisson"``
+    generates a seeded synthetic trace; ``mode="trace"`` replays the JSON
+    trace at ``trace_path`` (``repro.serve.traffic.save_trace``).
+    """
+
+    mode: str = "poisson"               # "poisson" | "trace"
+    seed: int = 0
+    horizon: float = 20000.0            # simulated seconds of traffic
+    interarrival: float = 1500.0        # mean seconds between job arrivals
+    # Mean tenant lifetime before voluntary departure; None -> tenants run
+    # to completion (target/max_rounds) and only the engine retires them.
+    mean_lifetime: Optional[float] = None
+    # A departing tenant returns later with this probability — the warm
+    # hand-off path (scheduler per-job state follows the tenant).
+    readmit_prob: float = 0.0
+    max_concurrent: int = 4             # admission-control budget (live jobs)
+    # Device churn: mean seconds between churn events (None -> no churn),
+    # the fleet fraction departing per event, how long until they rejoin,
+    # and the multiplicative capability drift (on ``a``) applied on rejoin.
+    churn_interarrival: Optional[float] = None
+    churn_fraction: float = 0.02
+    rejoin_after: float = 2000.0
+    drift: float = 1.0
+    trace_path: Optional[str] = None    # mode="trace" input
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """A complete multi-job FL experiment. ``build()`` -> ``Experiment``,
     ``run()`` -> ``ExperimentResult``; ``to_dict``/``from_dict`` round-trip
@@ -197,6 +230,10 @@ class ExperimentSpec:
     # marks the policy pre-trained).
     policy: Optional[str] = None
     policy_dir: str = "policies"
+    # Online traffic axis: set -> ``spec.jobs`` is a tenant-template
+    # catalogue served by ``repro.serve.SchedulerService`` (dynamic
+    # arrivals/departures/churn); None -> classic closed job set.
+    arrivals: Optional[ArrivalsSpec] = None
     non_iid: bool = True            # data distribution (both runtime kinds)
     n_sel: Optional[int] = None     # devices per round; None -> 10% of pool
     # Engine knobs: faults, stragglers, queueing-aware release horizon.
@@ -314,6 +351,8 @@ class ExperimentSpec:
         if train.get("buckets") is not None:
             train["buckets"] = tuple(train["buckets"])
         d["train"] = TrainSpec(**train)
+        if d.get("arrivals") is not None:
+            d["arrivals"] = ArrivalsSpec(**d["arrivals"])
         return cls(**d)
 
     @classmethod
@@ -337,13 +376,15 @@ class ExperimentSpec:
         axes (``pool``/``cost``/``fleet``/``train``), merged over the current
         values — so ``spec.replace(train={"eval_every": 2})`` and the CLI's
         ``--set train={...}`` work without rebuilding the whole sub-spec."""
-        for key in ("pool", "cost", "fleet", "train"):
+        for key in ("pool", "cost", "fleet", "train", "arrivals"):
             v = changes.get(key)
             if isinstance(v, dict):
                 v = {k: (tuple(val) if k in self._NESTED_TUPLE_FIELDS
                          and val is not None else val)
                      for k, val in v.items()}
-                changes[key] = dataclasses.replace(getattr(self, key), **v)
+                cur = getattr(self, key)
+                changes[key] = (dataclasses.replace(cur, **v) if cur is not None
+                                else ArrivalsSpec(**v))  # only arrivals can be None
         return dataclasses.replace(self, **changes)
 
 

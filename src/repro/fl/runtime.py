@@ -440,6 +440,38 @@ class SyntheticRuntime:
         self.noise = noise
         self.rng = rng
 
+    def add_job(self, job_id: int, config=None, b0: Optional[float] = None
+                ) -> None:
+        """Dynamic job admission (scheduler-service hook): grow the per-job
+        coverage/round state by one row. ``job_id`` must be the next index
+        (or an existing row, which is RESET — a readmitted tenant starts a
+        fresh model; its scheduler history transfers separately). A per-job
+        ``b0`` promotes a scalar rate to a per-job array on first use."""
+        if job_id > len(self.seen):
+            raise ValueError(f"add_job out of order: job_id {job_id} with "
+                             f"{len(self.seen)} existing jobs")
+        if b0 is None and config is not None:
+            b0 = getattr(config, "b0", None)
+        if job_id == len(self.seen):
+            self.seen.append(np.zeros(self.num_classes, dtype=np.float64))
+            self.rounds = np.concatenate([self.rounds, np.zeros(1, np.int64)])
+            if b0 is not None:
+                b = np.asarray(self.b0, dtype=np.float64)
+                if b.ndim == 0:
+                    b = np.full(len(self.seen) - 1, float(b))
+                self.b0 = np.concatenate([b, [float(b0)]])
+            elif np.ndim(self.b0) > 0:
+                self.b0 = np.concatenate([self.b0, [DEFAULT_B0]])
+        else:
+            self.seen[job_id][:] = 0.0
+            self.rounds[job_id] = 0
+            if b0 is not None:
+                b = np.asarray(self.b0, dtype=np.float64)
+                if b.ndim == 0:
+                    b = np.full(len(self.seen), float(b))
+                b[job_id] = float(b0)
+                self.b0 = b
+
     def run_round(self, job_id: int, device_ids: np.ndarray, round_idx: int):
         hit = self.device_classes[np.asarray(device_ids)].ravel()
         np.add.at(self.seen[job_id], hit, 1.0)

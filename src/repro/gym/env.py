@@ -91,6 +91,11 @@ class Scenario(NamedTuple):
     a_norm: jax.Array          # (K,) a / max(a)        (policy features)
     mu_norm: jax.Array         # (K,) mu / max(mu)
     data_norm: jax.Array       # (K, M) D / max(D)
+    # Online-traffic windows (global env steps): job m is live while
+    # job_start[m] <= t < job_end[m]; the closed-job-set default is
+    # start=0 / end=inf for every job.
+    job_start: jax.Array       # (M,)
+    job_end: jax.Array         # (M,)
 
 
 class EnvState(NamedTuple):
@@ -143,7 +148,8 @@ def calibrate_scales(cfg: EnvConfig, exp_base: jax.Array):
 
 
 def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
-                  time_scale=None, fairness_scale=None) -> Scenario:
+                  time_scale=None, fairness_scale=None,
+                  job_start=None, job_end=None) -> Scenario:
     """Materialize the derived per-job arrays (SoA fast path) and calibrate
     the cost normalizers (unless given, e.g. from a live CostModel — then
     ``cfg`` may be None)."""
@@ -158,6 +164,11 @@ def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
     exp_base = shift + scale                        # tau*D*(a + 1/mu)
     if time_scale is None or fairness_scale is None:
         time_scale, fairness_scale = calibrate_scales(cfg, exp_base)
+    M = d_t.shape[0]
+    if job_start is None:
+        job_start = jnp.zeros((M,), f32)
+    if job_end is None:
+        job_end = jnp.full((M,), jnp.inf, f32)
     return Scenario(
         a=a, mu=mu, data=data, taus=taus,
         failure_rate=jnp.asarray(failure_rate, f32),
@@ -165,7 +176,9 @@ def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
         fairness_scale=jnp.asarray(fairness_scale, f32),
         shift=shift, scale=scale, exp_base=exp_base,
         a_norm=a / jnp.max(a), mu_norm=mu / jnp.max(mu),
-        data_norm=data / jnp.max(data))
+        data_norm=data / jnp.max(data),
+        job_start=jnp.asarray(job_start, f32),
+        job_end=jnp.asarray(job_end, f32))
 
 
 def _zero_dynamics(cfg: EnvConfig, scen: Scenario, key: jax.Array) -> EnvState:
@@ -184,9 +197,10 @@ def _zero_dynamics(cfg: EnvConfig, scen: Scenario, key: jax.Array) -> EnvState:
 def reset(cfg: EnvConfig, scen_spec: ScenarioSpec, key: jax.Array) -> EnvState:
     """Draw a fresh randomized scenario and zero the dynamic state."""
     k_scen, k_env = jax.random.split(key)
-    a, mu, data, taus, failure_rate = sample_scenario(
+    a, mu, data, taus, failure_rate, job_start, job_end = sample_scenario(
         k_scen, scen_spec, cfg.num_devices, cfg.num_jobs)
-    scen = make_scenario(cfg, a, mu, data, taus, failure_rate)
+    scen = make_scenario(cfg, a, mu, data, taus, failure_rate,
+                         job_start=job_start, job_end=job_end)
     return _zero_dynamics(cfg, scen, k_env)
 
 
@@ -237,6 +251,18 @@ def release_instant(cfg: EnvConfig, state: EnvState) -> jax.Array:
 
 def available_mask(state: EnvState, now: jax.Array) -> jax.Array:
     return state.busy_until <= now + 1e-6
+
+
+def job_active(state: EnvState) -> jax.Array:
+    """() bool — is the job up for scheduling live at the current step?
+    (Online-traffic windows; always True under the closed-set default.)
+    Rollouts AND this into the plan: an inactive job's round is an empty
+    plan, which ``_apply_round`` treats as a zero-cost, zero-time no-op
+    (and an empty plan has zero REINFORCE log-prob, so inactive rounds
+    contribute no gradient)."""
+    t = state.t.astype(jnp.float32)
+    return ((state.scen.job_start[state.job] <= t)
+            & (t < state.scen.job_end[state.job]))
 
 
 def _apply_round(cfg: EnvConfig, state: EnvState, plan: jax.Array,
@@ -397,6 +423,7 @@ def policy_rollout(cfg: EnvConfig, params, state: EnvState, num_steps: int,
         feats, available = device_features(cfg, st, now)
         logits = _policy_logits(params, feats)
         plan = plan_from_gumbel(logits, g, available, cfg.n_sel)
+        plan = plan & job_active(st)
         st, out = _apply_round(cfg, st, plan, noise, fu)
         return st, Transition(feats=feats, plan=plan, available=available,
                               reward=out.reward, cost=out.cost,
@@ -432,6 +459,7 @@ def random_rollout(cfg: EnvConfig, state: EnvState, num_steps: int
         now = release_instant(cfg, st)
         available = available_mask(st, now)
         plan = plan_from_gumbel(jnp.zeros(K), g, available, cfg.n_sel)
+        plan = plan & job_active(st)
         return _apply_round(cfg, st, plan, e, fu)
 
     return jax.lax.scan(one, state, noise)

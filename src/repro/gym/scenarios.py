@@ -44,6 +44,15 @@ class ScenarioSpec:
     data_range: Tuple[float, float] = (200.0, 600.0)
     tau_range: Tuple[int, int] = (5, 5)
     failure_range: Tuple[float, float] = (0.0, 0.0)
+    # Online-traffic axis (mirrors the repro.serve service's dynamic job
+    # sets): each job arrives at a step drawn from ``arrival_window`` and
+    # stays for a lifetime drawn from ``lifetime`` (both in global env
+    # steps); (0, 0) means every job is live for the whole episode. Job 0
+    # is always anchored live so an episode never goes fully idle. Inactive
+    # jobs are plan-masked in rollouts — an empty plan is a zero-cost,
+    # zero-gradient no-op round.
+    arrival_window: Tuple[float, float] = (0.0, 0.0)
+    lifetime: Tuple[float, float] = (0.0, 0.0)
 
 
 CURRICULA: Dict[str, ScenarioSpec] = {
@@ -58,13 +67,19 @@ CURRICULA: Dict[str, ScenarioSpec] = {
     # Everything at once — the hardest training distribution.
     "full": ScenarioSpec(hetero_decades=(0.7, 2.5), tau_range=(1, 10),
                          failure_range=(0.0, 0.3)),
+    # Online traffic: jobs arrive mid-episode and depart after a finite
+    # lifetime (the repro.serve regime) — policies must stay robust to the
+    # fairness-count and occupancy shifts of a changing job mix.
+    "arrivals": ScenarioSpec(arrival_window=(0.0, 24.0),
+                             lifetime=(8.0, 48.0)),
 }
 
 
 def sample_scenario(key: jax.Array, scen: ScenarioSpec, num_devices: int,
                     num_jobs: int):
-    """Draw one scenario: (a, mu, data, taus, failure_rate) as jnp arrays."""
-    k_spread, k_a, k_mu, k_d, k_tau, k_f = jax.random.split(key, 6)
+    """Draw one scenario: (a, mu, data, taus, failure_rate, job_start,
+    job_end) as jnp arrays."""
+    k_spread, k_a, k_mu, k_d, k_tau, k_f, k_s, k_l = jax.random.split(key, 8)
     spread = jax.random.uniform(
         k_spread, (), minval=scen.hetero_decades[0],
         maxval=scen.hetero_decades[1])
@@ -79,5 +94,22 @@ def sample_scenario(key: jax.Array, scen: ScenarioSpec, num_devices: int,
                               scen.tau_range[1] + 1).astype(jnp.float32)
     failure_rate = jax.random.uniform(k_f, (), minval=scen.failure_range[0],
                                       maxval=scen.failure_range[1])
+    # Job activity windows (ScenarioSpec is static, so the no-traffic
+    # default compiles the windows away entirely). Job 0 anchors: always
+    # live from step 0 for the whole episode.
+    if scen.arrival_window == (0.0, 0.0):
+        job_start = jnp.zeros((num_jobs,), jnp.float32)
+    else:
+        job_start = jax.random.uniform(
+            k_s, (num_jobs,), minval=scen.arrival_window[0],
+            maxval=scen.arrival_window[1]).astype(jnp.float32)
+        job_start = job_start.at[0].set(0.0)
+    if scen.lifetime == (0.0, 0.0):
+        job_end = jnp.full((num_jobs,), jnp.inf, jnp.float32)
+    else:
+        life = jax.random.uniform(k_l, (num_jobs,), minval=scen.lifetime[0],
+                                  maxval=scen.lifetime[1])
+        job_end = (job_start + life).astype(jnp.float32).at[0].set(jnp.inf)
     return (a.astype(jnp.float32), mu.astype(jnp.float32),
-            data.astype(jnp.float32), taus, failure_rate.astype(jnp.float32))
+            data.astype(jnp.float32), taus, failure_rate.astype(jnp.float32),
+            job_start, job_end)

@@ -74,11 +74,14 @@ class PolicyZoo:
         The scheduler must expose ``state_dict``/``load_state_dict`` and its
         registry name must match the saved policy kind.
         """
-        if not hasattr(scheduler, "state_dict"):
+        # SchedulerBase gives every scheduler an EMPTY state_dict default
+        # (service warm hand-off protocol); only learners override it with
+        # real state, so an empty tree means there is nothing to load into.
+        if not scheduler.state_dict():
             raise TypeError(
-                f"scheduler {scheduler.name!r} has no state_dict/"
-                "load_state_dict; only learned schedulers (rlds, dnn, bods) "
-                "can load zoo policies")
+                f"scheduler {scheduler.name!r} has an empty state_dict; "
+                "only learned schedulers (rlds, dnn, bods) can load zoo "
+                "policies")
         # info() raises the known-names FileNotFoundError for missing
         # entries and reads the kind from the manifest BEFORE any arrays
         # materialize, so a mismatched tree structure can't mask the error.

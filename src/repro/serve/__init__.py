@@ -1,0 +1,28 @@
+"""Online multi-tenant scheduler service (``python -m repro.serve``).
+
+The classic experiment pipeline runs a CLOSED job set: every job exists at
+t=0 and the engine drains the heap. Production multi-job FL is open-world —
+tenants submit jobs while others are mid-flight, devices leave and rejoin
+the fleet with drifted capabilities, and the scheduler must re-plan
+incrementally instead of re-searching from scratch on every change.
+
+- ``repro.serve.traffic``  — arrival/departure/churn event streams
+  (seeded Poisson generation, JSON trace replay).
+- ``repro.serve.service``  — the event loop: admission control under a
+  concurrent-job budget, mid-run ``add_job``/``retire_job`` on the engine,
+  incremental plan rescoring, scheduler warm hand-off across
+  retire/readmit cycles.
+- ``repro.serve.metrics``  — decision-latency percentiles, throughput,
+  queue depth, per-tenant cost/fairness accounting.
+"""
+
+from repro.serve.metrics import LatencyStats, ServiceMetrics, ServiceReport
+from repro.serve.service import SchedulerService
+from repro.serve.traffic import (TrafficEvent, load_trace, poisson_trace,
+                                 save_trace, trace_from_spec)
+
+__all__ = [
+    "LatencyStats", "SchedulerService", "ServiceMetrics", "ServiceReport",
+    "TrafficEvent", "load_trace", "poisson_trace", "save_trace",
+    "trace_from_spec",
+]

@@ -1,0 +1,94 @@
+"""Scheduler-service CLI.
+
+  python -m repro.serve --preset online-smoke
+  python -m repro.serve --preset online-smoke --rescore full --out report.json
+  python -m repro.serve --spec spec.json --save-trace trace.json
+  python -m repro.serve --preset online-smoke --trace trace.json --verbose
+
+``--preset``/``--arg``/``--set`` follow the experiment CLI's conventions
+(``--arg k=v`` feeds the preset factory, ``--set k=v`` overrides spec
+fields, including nested dicts: ``--set 'arrivals={"horizon": 40000}'``).
+``--save-trace`` writes the generated traffic stream as JSON;
+``--trace`` replays one (bit-identical traffic across service configs —
+how the incremental-vs-full benchmark holds traffic fixed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.experiment.cli import _parse_kv
+from repro.experiment.presets import get_preset
+from repro.experiment.spec import ExperimentSpec
+from repro.serve.service import RESCORE_MODES, SchedulerService
+from repro.serve.traffic import load_trace, save_trace, trace_from_spec
+
+
+def _print_report(service: SchedulerService) -> None:
+    r = service.last_report
+    lat = r.decision_latency
+    print(f"\n[{service.spec.name}] scheduler={service.spec.scheduler} "
+          f"rescore={service.rescore_mode}")
+    print(f"  traffic: {r.arrivals} arrivals, {r.departures} departures, "
+          f"{r.readmissions} readmissions, {r.churn_events} churn events, "
+          f"{r.rejections} queued")
+    print(f"  rounds:  {r.rounds_completed} completed "
+          f"({r.rounds_per_sec:.1f}/s wall), tenant fairness "
+          f"(Jain) {r.tenant_fairness:.3f}")
+    print(f"  latency: p50={lat['p50_s'] * 1e3:.2f}ms "
+          f"p99={lat['p99_s'] * 1e3:.2f}ms over {lat['count']} decisions; "
+          f"queue depth max={r.queue_depth_max}")
+    for name, t in sorted(service.metrics.tenants.items()):
+        print(f"    {name:12s} rounds={t.rounds:4d} "
+              f"admissions={t.admissions} "
+              f"mean_cost={t.total_cost / t.rounds if t.rounds else 0.0:.3f} "
+              f"best_acc={t.best_accuracy:.3f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--preset", help="preset name (e.g. online-smoke)")
+    src.add_argument("--spec", help="path to an ExperimentSpec JSON file")
+    ap.add_argument("--arg", action="append", metavar="K=V",
+                    help="preset factory argument")
+    ap.add_argument("--set", action="append", metavar="K=V",
+                    help="override a spec field (nested dicts merge)")
+    ap.add_argument("--rescore", choices=RESCORE_MODES,
+                    default="incremental")
+    ap.add_argument("--trace", help="replay this traffic trace JSON")
+    ap.add_argument("--save-trace", help="write the traffic trace here")
+    ap.add_argument("--out", help="write the ServiceReport JSON here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.preset:
+        spec = get_preset(args.preset, **_parse_kv(args.arg))
+    else:
+        spec = ExperimentSpec.load(args.spec)
+    if args.set:
+        spec = spec.replace(**_parse_kv(args.set))
+    if spec.arrivals is None:
+        raise SystemExit("spec has no arrivals axis — use an online preset "
+                         "or --set 'arrivals={...}'")
+
+    service = SchedulerService(spec, rescore_mode=args.rescore,
+                               verbose=args.verbose)
+    trace = (load_trace(args.trace) if args.trace
+             else trace_from_spec(spec.arrivals, len(service.templates),
+                                  service.engine.pool.num_devices))
+    if args.save_trace:
+        save_trace(trace, args.save_trace)
+        print(f"trace -> {args.save_trace} ({len(trace)} events)")
+    report = service.run(trace)
+    _print_report(service)
+    if args.out:
+        report.save(args.out)
+        print(f"report -> {args.out}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,297 @@
+"""The online multi-tenant scheduler service.
+
+``SchedulerService`` wraps a built ``MultiJobEngine`` in an event loop that
+interleaves EXTERNAL traffic (job arrivals/departures, device churn — a
+``repro.serve.traffic`` trace) with the engine's INTERNAL round events
+(``engine.advance_until``). The spec's job list becomes a catalogue of
+tenant templates: template jobs are parked (never run), and every arrival
+instantiates a fresh engine job from its template.
+
+Admission control: at most ``arrivals.max_concurrent`` live jobs; excess
+arrivals queue and are admitted least-served-first when a slot frees (a job
+finishes or its tenant departs) — Jain-fairness-aware admission.
+
+Per-arrival plan rescoring (the admission decision's cost estimate for
+every live job under the post-arrival world state) runs in one of two modes:
+
+- ``incremental`` — rescore each live job's CURRENT plan through the
+  batched scoring core, reusing the pool's SoA caches and skipping jobs
+  whose world is unchanged (``pool.version`` + round index as the cache
+  key). Churn invalidates exactly the affected entries.
+- ``full``        — re-run a cold scheduler's complete plan SEARCH for
+  every live job (the ablation baseline the incremental path is benched
+  against; ``benchmarks/bench_serve.py`` gates the speedup).
+
+Both modes are ADVISORY: executed plans always come from the live
+scheduler inside the engine, so the realized trajectory is identical across
+modes — the bench compares decision latency at equal outcomes.
+
+Warm hand-off: a departing tenant's per-job scheduler state
+(``job_state_dict`` — BODS observation ring, RLDS baseline) is saved and
+reloaded under the new job id if the tenant is readmitted, BEFORE its first
+decision (``add_job(launch=False)`` + ``launch_job``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core.multijob import MultiJobEngine, RoundRecord
+from repro.experiment.spec import ExperimentSpec
+from repro.serve.metrics import ServiceMetrics, ServiceReport
+from repro.serve.traffic import TrafficEvent, trace_from_spec
+
+RESCORE_MODES = ("incremental", "full")
+
+
+class SchedulerService:
+    def __init__(self, spec: ExperimentSpec,
+                 rescore_mode: str = "incremental",
+                 verbose: bool = False):
+        if spec.arrivals is None:
+            raise ValueError("SchedulerService needs spec.arrivals "
+                             "(the online traffic axis)")
+        if rescore_mode not in RESCORE_MODES:
+            raise ValueError(f"rescore_mode {rescore_mode!r} not in "
+                             f"{RESCORE_MODES}")
+        self.spec = spec
+        self.rescore_mode = rescore_mode
+        self.verbose = verbose
+
+        self.engine: MultiJobEngine = spec.build().engine
+        eng = self.engine
+        # The catalogue: template configs + their data-size columns. Park
+        # the template jobs — they exist so build()/calibration see a valid
+        # job mix, but only arrival-instantiated jobs ever run.
+        self.templates = [js.config for js in eng.jobs]
+        self.template_data = [eng.pool.data_sizes[:, i].copy()
+                              for i in range(len(self.templates))]
+        for js in eng.jobs:
+            js.parked = True
+            js.done = True
+        eng.on_job_done = self._on_job_done
+
+        self.metrics = ServiceMetrics()
+        self._live: Set[int] = set()            # admitted, not finished
+        self._tenant_job: Dict[str, int] = {}   # live tenant -> job id
+        # Job ids are never reused, so job -> tenant is PERMANENT — a
+        # retired tenant's in-flight round still finishes (and must still
+        # be attributed) after its slot is released.
+        self._job_tenant: Dict[int, str] = {}
+        self._tenant_template: Dict[str, int] = {}
+        self._tenant_saved: Dict[str, dict] = {}  # retired -> per-job state
+        self._queue: List[str] = []             # tenants waiting for a slot
+        # Incremental rescoring memo: job -> ((pool.version, round_idx), cost)
+        self._rescore_cache: Dict[int, tuple] = {}
+        # Advisory mean rescore cost per admission (the bench's parity data).
+        self.rescore_costs: List[float] = []
+        self._cold = (self._make_cold_scheduler()
+                      if rescore_mode == "full" else None)
+        self.last_report: Optional[ServiceReport] = None
+
+    # ---- construction helpers ----
+
+    def _make_cold_scheduler(self):
+        """A second scheduler instance for the ``full`` ablation: same
+        registry entry and knobs, own seed/rng (so its advisory searches
+        never perturb the live scheduler's decision stream), and no
+        pre-training (RLDS) — it re-searches from the current world state,
+        which is the point."""
+        from repro.experiment.registry import SCHEDULERS
+
+        spec = self.spec
+        kwargs = {"cost_model": self.engine.cost_model,
+                  "seed": spec.scheduler_seed + 10_000,
+                  **spec._candidate_kwargs(),
+                  **dict(spec.scheduler_kwargs)}
+        if "pretrain_rounds" in spec._scheduler_params():
+            kwargs["pretrain_rounds"] = 0
+        return SCHEDULERS.create(spec.scheduler, **kwargs)
+
+    # ---- engine callbacks ----
+
+    def _on_round(self, rec: RoundRecord) -> None:
+        self.metrics.rounds_completed += 1
+        tenant = self._job_tenant.get(rec.job)
+        if tenant is None:
+            return
+        ts = self.metrics.tenants[tenant]
+        ts.rounds += 1
+        ts.total_cost += rec.cost
+        ts.total_round_time += rec.round_time
+        ts.last_fairness = rec.fairness
+        ts.best_accuracy = max(ts.best_accuracy, rec.accuracy)
+
+    def _on_job_done(self, job: int, now: float) -> None:
+        """Engine signal: a job finished naturally (target/max_rounds) —
+        free its admission slot and drain the queue."""
+        self._release(job, now)
+
+    # ---- admission control ----
+
+    def _release(self, job: int, now: float) -> None:
+        tenant = self._job_tenant.get(job)
+        if tenant is not None and self._tenant_job.get(tenant) == job:
+            self._tenant_job.pop(tenant)
+        self._live.discard(job)
+        self._rescore_cache.pop(job, None)
+        self._drain_queue(now)
+
+    def _drain_queue(self, now: float) -> None:
+        while self._queue and len(self._live) < self.spec.arrivals.max_concurrent:
+            # Least-served first: the tenant with the fewest rounds across
+            # ALL its admissions gets the freed slot.
+            self._queue.sort(key=lambda t: self.metrics.tenants[t].rounds)
+            tenant = self._queue.pop(0)
+            self.metrics.tenants[tenant].queued_at = None
+            self._admit(tenant, self._tenant_template[tenant], now)
+
+    def _admit(self, tenant: str, template: int, now: float) -> None:
+        t0 = time.perf_counter()
+        self._rescore(now)
+        eng = self.engine
+        job = eng.add_job(self.templates[template],
+                          data_sizes=self.template_data[template],
+                          now=now, launch=False)
+        saved = self._tenant_saved.pop(tenant, None)
+        if saved is not None:
+            # Warm hand-off: the tenant's history lands under its NEW job
+            # id before the first decision is made.
+            eng.scheduler.load_job_state(job, saved)
+            self.metrics.readmissions += 1
+        eng.launch_job(job, now)
+        self.metrics.decision_latency.add(time.perf_counter() - t0)
+        self.metrics.decisions += 1
+        self._live.add(job)
+        self._tenant_job[tenant] = job
+        self._job_tenant[job] = tenant
+        self.metrics.tenants[tenant].admissions += 1
+        if self.verbose:
+            print(f"[t={now:9.1f}s] admit  {tenant} -> job{job} "
+                  f"(template {template}, live={len(self._live)})")
+
+    # ---- incremental plan rescoring ----
+
+    def _rescore(self, now: float) -> Dict[int, float]:
+        """Advisory cost estimate of every live job's plan under the
+        current world state — the admission decision's inputs."""
+        eng = self.engine
+        costs: Dict[int, float] = {}
+        for job in sorted(self._live):
+            if eng.jobs[job].done:
+                continue
+            if self.rescore_mode == "incremental":
+                key = (eng.pool.version, eng.jobs[job].round_idx)
+                cached = self._rescore_cache.get(job)
+                if cached is not None and cached[0] == key:
+                    costs[job] = cached[1]
+                    continue
+                # Score the job's CURRENT plan under the post-churn time
+                # model — wait-free (its own devices are mid-round busy;
+                # full-search also plans over wait-free devices, so this is
+                # the comparable quantity). ``pool.expected_times`` is the
+                # per-(job, tau) memo that churn invalidation refreshes:
+                # unchanged world -> pure cache lookups end to end.
+                cm = eng.cost_model
+                tau = eng.jobs[job].config.local_epochs
+                times = eng.pool.expected_times(job, tau)
+                f = eng._in_flight.get(job)
+                if f is not None:
+                    plan = f["plan"]
+                else:
+                    # Between rounds (waiting on a retry): cheapest-n
+                    # closed-form stand-in.
+                    plan = np.zeros(eng.pool.num_devices, dtype=bool)
+                    plan[np.argsort(times)[: eng.n_sel]] = True
+                c = float(cm.total_cost_batch(
+                    job=job, tau=tau, counts=eng.counts[job],
+                    plans=plan[None], other_costs=0.0, times=times)[0])
+                self._rescore_cache[job] = (key, c)
+                costs[job] = c
+            else:
+                self._cold.ensure_jobs(len(eng.jobs))
+                ctx = eng._make_ctx(job, now)
+                self._cold.schedule(ctx)
+                est = self._cold.last_estimated_cost
+                costs[job] = float(est) if est is not None else 0.0
+        self.rescore_costs.append(
+            float(np.mean(list(costs.values()))) if costs else 0.0)
+        return costs
+
+    # ---- traffic handling ----
+
+    def _handle(self, ev: TrafficEvent) -> None:
+        now = ev.t
+        eng = self.engine
+        if ev.kind == "arrive":
+            self.metrics.arrivals += 1
+            template = (ev.template if ev.template is not None
+                        else self._tenant_template.get(ev.tenant, 0))
+            self._tenant_template[ev.tenant] = template
+            self.metrics.tenant(ev.tenant, template)
+            if ev.tenant in self._tenant_job or ev.tenant in self._queue:
+                return  # duplicate arrival of a live/queued tenant
+            if len(self._live) < self.spec.arrivals.max_concurrent:
+                self._admit(ev.tenant, template, now)
+            else:
+                self.metrics.rejections += 1
+                self.metrics.tenants[ev.tenant].queued_at = now
+                self._queue.append(ev.tenant)
+                if self.verbose:
+                    print(f"[t={now:9.1f}s] queue  {ev.tenant} "
+                          f"(depth={len(self._queue)})")
+        elif ev.kind == "depart":
+            self.metrics.departures += 1
+            if ev.tenant in self._queue:
+                self._queue.remove(ev.tenant)
+                return
+            job = self._tenant_job.get(ev.tenant)
+            if job is None:
+                return  # already finished (slot released via on_job_done)
+            self._tenant_saved[ev.tenant] = eng.scheduler.job_state_dict(job)
+            eng.retire_job(job, now=now)
+            if self.verbose:
+                print(f"[t={now:9.1f}s] retire {ev.tenant} (job{job})")
+            self._release(job, now)
+        elif ev.kind == "churn_out":
+            self.metrics.churn_events += 1
+            eng.pool.depart(ev.devices)
+        elif ev.kind == "churn_in":
+            self.metrics.churn_events += 1
+            if ev.drift != 1.0:
+                ids = np.asarray(ev.devices)
+                eng.pool.rejoin(ids, a=eng.pool.a[ids] * ev.drift)
+            else:
+                eng.pool.rejoin(ev.devices)
+
+    # ---- the event loop ----
+
+    def run(self, trace: Optional[List[TrafficEvent]] = None
+            ) -> ServiceReport:
+        """Sustain the traffic stream end-to-end: for each traffic event,
+        advance the engine's internal heap up to the event's timestamp,
+        apply the event, then drain the remaining rounds. Returns the
+        service report; per-job engine summaries stay on
+        ``self.engine.summary()``."""
+        arr = self.spec.arrivals
+        eng = self.engine
+        if trace is None:
+            trace = trace_from_spec(arr, len(self.templates),
+                                    eng.pool.num_devices)
+        self.trace = trace
+        t0 = time.perf_counter()
+        for ev in trace:
+            eng.advance_until(ev.t, on_round=self._on_round)
+            self._handle(ev)
+            self.metrics.events_processed += 1
+            self.metrics.sample_queue_depth(len(self._queue))
+        # Drain: live jobs run to completion; finishing jobs release slots,
+        # which admits queued tenants mid-drain (on_job_done fires inside
+        # advance_until, so late admissions still execute).
+        eng.advance_until(np.inf, on_round=self._on_round)
+        self.last_report = self.metrics.report(
+            sim_horizon=arr.horizon, wall_s=time.perf_counter() - t0)
+        return self.last_report

@@ -300,3 +300,66 @@ def test_spec_policy_axis_json_roundtrip(tmp_path):
     restored = ExperimentSpec.from_json(spec.to_json())
     assert restored == spec
     assert restored.policy == "some-policy"
+
+
+# ---- online-traffic (arrivals) curriculum --------------------------------
+
+def test_arrivals_curriculum_draws_job_windows():
+    from repro.gym.scenarios import sample_scenario
+
+    spec = CURRICULA["arrivals"]
+    key = jax.random.PRNGKey(0)
+    a, mu, data, taus, fr, start, end = sample_scenario(key, spec, 24, 4)
+    assert start.shape == (4,) and end.shape == (4,)
+    # job 0 anchors the episode: live from step 0, never departs
+    assert float(start[0]) == 0.0 and not bool(jnp.isfinite(end[0]))
+    lo, hi = spec.arrival_window
+    assert bool(((start[1:] >= lo) & (start[1:] <= hi)).all())
+    assert bool((end[1:] > start[1:]).all())
+    # the closed-set default compiles the windows away
+    a2, mu2, d2, t2, f2, s2, e2 = sample_scenario(
+        key, CURRICULA["default"], 24, 4)
+    assert float(jnp.abs(s2).sum()) == 0.0
+    assert not bool(jnp.isfinite(e2).any())
+
+
+def test_inactive_job_round_is_noop():
+    """A plan-masked (inactive-job) round must leave counts/time untouched
+    and contribute zero cost — the empty-plan no-op the arrivals curriculum
+    relies on."""
+    from repro.gym.env import job_active, random_rollout
+
+    cfg = small_cfg()
+    state = reset(cfg, CURRICULA["default"], jax.random.PRNGKey(3))
+    # Force every job inactive by pushing all arrivals past the horizon.
+    far = jnp.full((cfg.num_jobs,), 1e9, jnp.float32)
+    state = state._replace(scen=state.scen._replace(job_start=far))
+    assert not bool(job_active(state))
+    final, tr = jax.jit(random_rollout, static_argnums=(0, 2))(cfg, state, 6)
+    np.testing.assert_array_equal(np.asarray(tr.cost), 0.0)
+    np.testing.assert_array_equal(np.asarray(tr.round_time), 0.0)
+    np.testing.assert_array_equal(np.asarray(final.counts),
+                                  np.asarray(state.counts))
+
+
+def test_arrivals_rollout_masks_inactive_jobs():
+    from repro.core.schedulers.rlds import init_policy
+
+    cfg = small_cfg(num_jobs=4)
+    states = batch_reset(cfg, CURRICULA["arrivals"], jax.random.PRNGKey(4), 6)
+    params = init_policy(jax.random.PRNGKey(5))
+    finals, tr = batch_rollout(cfg, params, states, 40)
+    plans = np.asarray(tr.plan)        # (E, T, K)
+    jobs = np.asarray(tr.job)          # (E, T)
+    start = np.asarray(states.scen.job_start)  # (E, M)
+    end = np.asarray(states.scen.job_end)
+    # Every round scheduled for a job outside its window must be empty.
+    # The env's clock t equals the step index within the rollout here
+    # (rollout starts at t=0).
+    E, T = jobs.shape
+    t = np.arange(T)[None, :]
+    active = ((np.take_along_axis(start, jobs, axis=1) <= t)
+              & (t < np.take_along_axis(end, jobs, axis=1)))
+    assert (plans.sum(-1)[~active] == 0).all()
+    # ...and the curriculum actually exercises inactivity AND activity.
+    assert bool(active.any()) and bool((~active).any())
