@@ -14,15 +14,38 @@ population/candidate knobs), so the recorded ``mean_cost`` columns are
 directly comparable — the regression gate requires fused decisions to be
 at least as good AND at least as fast as host ones.
 
+``--shards N`` adds informational fused arms with the fleet axis sharded
+across N host platform devices (``CostModel.num_shards`` -> the fused
+searchers' shard_map chains; re-execs via ``repro.launch.bootstrap`` so
+the devices exist). These rows are NOT gated — chain partitioning is
+bitwise-identical to single-lane by construction, so the arms only track
+the dispatch overhead / speedup of the sharded search path.
+
   PYTHONPATH=src python -m benchmarks.bench_sched            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_sched --smoke    # CI-sized
+  PYTHONPATH=src python -m benchmarks.bench_sched --shards 4 # + sharded arms
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+
+# Size the host platform before anything imports jax (see bench_fleet).
+from repro.launch.bootstrap import ensure_host_devices
+
+
+def _peek_shards(argv) -> int:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--shards", type=int, default=1)
+    ns, _ = ap.parse_known_args(argv)
+    return max(1, ns.shards)
+
+
+if __name__ == "__main__":
+    ensure_host_devices(_peek_shards(sys.argv[1:]))  # may os.execve()
 
 import numpy as np
 
@@ -57,12 +80,12 @@ def search_kwargs(name: str, backend: str) -> dict:
             "cooling": 0.97 ** SA_CHAINS}
 
 
-def make_scenario(K: int, seed: int):
+def make_scenario(K: int, seed: int, num_shards: int = 1):
     """A fleet-realistic decision point: 20% of the pool busy, non-trivial
     cumulative counts, calibrated cost normalizers."""
     n_sel = max(1, K // 100)
     pool = DevicePool.heterogeneous(K, 2, seed=seed)
-    cm = CostModel(pool, alpha=4.0, beta=0.25)
+    cm = CostModel(pool, alpha=4.0, beta=0.25, num_shards=num_shards)
     cm.calibrate([5.0, 5.0], n_sel=n_sel)
     rng = np.random.default_rng(seed + 1000)
     counts = rng.integers(0, 8, K).astype(np.float64)
@@ -80,8 +103,9 @@ def make_scenario(K: int, seed: int):
 
 
 def bench_decisions(name: str, backend: str, K: int, seed: int = 0,
-                    min_s: float = 1.0, max_reps: int = 200) -> dict:
-    cm, ctx, n_sel = make_scenario(K, seed)
+                    min_s: float = 1.0, max_reps: int = 200,
+                    num_shards: int = 1) -> dict:
+    cm, ctx, n_sel = make_scenario(K, seed, num_shards=num_shards)
     kw = search_kwargs(name, backend)
     if name in SEARCHERS:
         kw["search_backend"] = backend
@@ -98,6 +122,7 @@ def bench_decisions(name: str, backend: str, K: int, seed: int = 0,
         if elapsed >= min_s or reps >= max_reps:
             break
     return {"scheduler": name, "backend": backend, "K": K, "n_sel": n_sel,
+            "shards": num_shards,
             "reps": reps, "sec_per_decision": elapsed / reps,
             "decisions_per_sec": reps / elapsed,
             "mean_cost": float(np.mean(costs))}
@@ -115,6 +140,9 @@ def main(argv=None) -> None:
     ap.add_argument("--cost-tol", type=float, default=1.005,
                     help="fail if fused mean chosen-plan cost exceeds "
                          "host mean * this factor at matched budgets")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="add informational fused arms with the fleet axis "
+                         "sharded over this many host devices (not gated)")
     args = ap.parse_args(argv)
 
     Ks = SMOKE_KS if args.smoke else FULL_KS
@@ -135,6 +163,15 @@ def main(argv=None) -> None:
                   f" dec/s (cost {h['mean_cost']:.4f})  fused "
                   f"{f['decisions_per_sec']:8.2f} dec/s (cost "
                   f"{f['mean_cost']:.4f})  x{f['speedup_vs_host']:.1f}")
+            if args.shards > 1:
+                s = bench_decisions(name, "fused", K, min_s=min_s,
+                                    num_shards=args.shards)
+                s["speedup_vs_host"] = (s["decisions_per_sec"]
+                                        / h["decisions_per_sec"])
+                rows.append(s)
+                print(f"  K={K:>6} {name:>8}: fused@{args.shards} "
+                      f"{s['decisions_per_sec']:8.2f} dec/s (cost "
+                      f"{s['mean_cost']:.4f})  x{s['speedup_vs_host']:.1f}")
         for name in BASELINES:
             r = bench_decisions(name, "host", K, min_s=min_s)
             rows.append(r)
@@ -148,7 +185,8 @@ def main(argv=None) -> None:
         h = next(r for r in rows if r["scheduler"] == name
                  and r["backend"] == "host" and r["K"] == K_gate)
         f = next(r for r in rows if r["scheduler"] == name
-                 and r["backend"] == "fused" and r["K"] == K_gate)
+                 and r["backend"] == "fused" and r["K"] == K_gate
+                 and r.get("shards", 1) == 1)
         if name in GATED:
             speedup = f["decisions_per_sec"] / h["decisions_per_sec"]
             if speedup < args.min_speedup:

@@ -45,6 +45,11 @@ class CostModel:
     # Batched-scoring backend: "numpy" | "jax" | "pallas" | "auto" (auto
     # picks numpy for small P*K, the jitted jax path at fleet scale).
     scoring_backend: str = "auto"
+    # Fleet-axis shards for the scoring core and fused searchers (see
+    # repro.core.shard): 1 = single lane; >1 partitions the K axis of
+    # cost_batch/cost_indices and the parallel axes of SA/GA/BODS across
+    # host platform devices. Plumbed from FleetSpec.num_shards.
+    num_shards: int = 1
 
     # ---- Formula 5 ----
 
@@ -91,7 +96,8 @@ class CostModel:
             times, counts, plans, alpha=self.alpha, beta=self.beta,
             time_scale=self.time_scale, fairness_scale=self.fairness_scale,
             delta_fairness=self.delta_fairness,
-            backend=backend if backend is not None else self.scoring_backend)
+            backend=backend if backend is not None else self.scoring_backend,
+            num_shards=self.num_shards)
 
     def cost_indices(self, times: np.ndarray, counts: np.ndarray,
                      idx: np.ndarray, backend: Optional[str] = None) -> np.ndarray:
@@ -102,7 +108,8 @@ class CostModel:
             times, counts, idx, alpha=self.alpha, beta=self.beta,
             time_scale=self.time_scale, fairness_scale=self.fairness_scale,
             delta_fairness=self.delta_fairness,
-            backend=backend if backend is not None else self.scoring_backend)
+            backend=backend if backend is not None else self.scoring_backend,
+            num_shards=self.num_shards)
 
     # ---- Formula 8 (TotalCost): current job's candidate + other jobs' fixed plans ----
 

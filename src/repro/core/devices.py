@@ -26,6 +26,17 @@ from typing import Optional, Sequence
 import numpy as np
 
 
+def _bf16_dtype() -> np.dtype:
+    """bfloat16 if the runtime ships it (``ml_dtypes`` comes with jax),
+    else float16 — either way a 2-byte compact mirror."""
+    try:
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+        return np.dtype(np.float16)
+
+
 @dataclasses.dataclass
 class DevicePool:
     """K devices, their capabilities, per-job data sizes, and occupancy."""
@@ -38,9 +49,19 @@ class DevicePool:
     # Occupancy: device k is busy until time busy_until[k] (simulated seconds).
     busy_until: np.ndarray = None  # (K,)
 
+    # Pool-level dtype for every time-valued hot-path buffer (busy_until,
+    # the SoA coefficient arrays, the sampling scratch buffer). float64 by
+    # default; a million-device pool drops to float32 to halve its resident
+    # footprint — the scoring core consumes the float32/bf16 mirrors either
+    # way, so plan costs are unchanged.
+    time_dtype: np.dtype = np.float64
+
     def __post_init__(self):
+        self.time_dtype = np.dtype(self.time_dtype)
         if self.busy_until is None:
-            self.busy_until = np.zeros(self.num_devices, dtype=np.float64)
+            self.busy_until = np.zeros(self.num_devices, dtype=self.time_dtype)
+        else:
+            self.busy_until = np.asarray(self.busy_until, dtype=self.time_dtype)
         self._soa_src = None  # SoA caches build lazily (data_sizes may be rescaled)
         self._version = 0     # bumped on every invalidation (churn detection)
 
@@ -55,13 +76,15 @@ class DevicePool:
         a_range=(2e-4, 2e-3),
         mu_range=(1.0, 10.0),
         data_range=(200, 600),
+        time_dtype=np.float64,
     ) -> "DevicePool":
         """Log-uniform capabilities — a 10x speed spread as in edge fleets."""
         rng = np.random.default_rng(seed)
         a = np.exp(rng.uniform(np.log(a_range[0]), np.log(a_range[1]), num_devices))
         mu = rng.uniform(*mu_range, num_devices)
         d = rng.integers(data_range[0], data_range[1], size=(num_devices, num_jobs))
-        return cls(a=a, mu=mu, data_sizes=d.astype(np.float64), rng=rng)
+        return cls(a=a, mu=mu, data_sizes=d.astype(np.float64), rng=rng,
+                   time_dtype=time_dtype)
 
     @property
     def num_devices(self) -> int:
@@ -146,13 +169,18 @@ class DevicePool:
         if self._soa_src is self.data_sizes:
             return
         d = self.data_sizes.T                         # (M, K)
-        self._base = np.ascontiguousarray(d * (self.a + 1.0 / self.mu))  # E[t]/tau
-        self._shift = np.ascontiguousarray(d * self.a)                   # floor/tau
-        self._scale = np.ascontiguousarray(d / self.mu)                  # Exp scale/tau
+        dt = self.time_dtype
+        self._base = np.ascontiguousarray(
+            (d * (self.a + 1.0 / self.mu)).astype(dt, copy=False))  # E[t]/tau
+        self._shift = np.ascontiguousarray(
+            (d * self.a).astype(dt, copy=False))                    # floor/tau
+        self._scale = np.ascontiguousarray(
+            (d / self.mu).astype(dt, copy=False))                   # Exp scale/tau
         self._base32 = self._base.astype(np.float32)  # scoring-core mirror
+        self._base_bf16 = None                        # lazy 2-byte mirror
         self._exp_cache = {}                          # (job, tau) -> (K,) E[t]
         self._shift_cache = {}                        # (job, tau) -> (K,) tau*shift
-        self._ebuf = np.empty(self.num_devices, dtype=np.float64)
+        self._ebuf = np.empty(self.num_devices, dtype=dt)
         self._soa_src = self.data_sizes
 
     # ---- time model (Formula 4) ----
@@ -173,10 +201,22 @@ class DevicePool:
         self._ensure_soa()
         return np.float32(tau) * self._base32[job]
 
+    def expected_times_bf16(self, job: int, tau: float) -> np.ndarray:
+        """Expected times computed from the 2-byte (bf16) coefficient
+        mirror, upcast to float32 for arithmetic. Quarter the float64
+        coefficients' footprint at ~0.4% relative error (bf16 keeps
+        float32's exponent range, 8 mantissa bits) — the memory-bound
+        choice for million-device fleets. Built lazily; rebuilt with the
+        SoA on churn."""
+        self._ensure_soa()
+        if self._base_bf16 is None:
+            self._base_bf16 = self._base32.astype(_bf16_dtype())
+        return np.float32(tau) * self._base_bf16[job].astype(np.float32)
+
     def expected_times_all(self, taus: Sequence[float]) -> np.ndarray:
         """(M, K) expected times for every job fused in one call."""
         self._ensure_soa()
-        return np.asarray(taus, dtype=np.float64)[:, None] * self._base
+        return np.asarray(taus, dtype=self.time_dtype)[:, None] * self._base
 
     def sample_times(self, job: int, tau: float, size: Optional[int] = None) -> np.ndarray:
         """Sample realized times for all K devices (one round)."""
@@ -184,7 +224,7 @@ class DevicePool:
         if size is not None:
             e = self.rng.exponential(1.0, size=(size, self.num_devices))
             return tau * self._shift[job] + e * (tau * self._scale[job])
-        out = np.empty(self.num_devices, dtype=np.float64)
+        out = np.empty(self.num_devices, dtype=self.time_dtype)
         return self.sample_times_into(job, tau, out)
 
     def sample_times_into(self, job: int, tau: float, out: np.ndarray) -> np.ndarray:
@@ -195,7 +235,7 @@ class DevicePool:
         if shift is None:
             shift = tau * self._shift[job]
             self._shift_cache[key] = shift
-        self.rng.standard_exponential(out=self._ebuf)
+        self.rng.standard_exponential(out=self._ebuf, dtype=self._ebuf.dtype)
         np.multiply(self._ebuf, self._scale[job], out=out)
         out *= tau
         out += shift
@@ -204,8 +244,9 @@ class DevicePool:
     def sample_times_all(self, taus: Sequence[float]) -> np.ndarray:
         """(M, K) one realized round for every job, one fused RNG draw."""
         self._ensure_soa()
-        t = np.asarray(taus, dtype=np.float64)[:, None]
-        e = self.rng.standard_exponential((self.num_jobs, self.num_devices))
+        t = np.asarray(taus, dtype=self.time_dtype)[:, None]
+        e = self.rng.standard_exponential((self.num_jobs, self.num_devices),
+                                          dtype=self.time_dtype)
         return t * self._shift + e * (t * self._scale)
 
     # ---- occupancy ----
@@ -216,9 +257,9 @@ class DevicePool:
 
     def occupy(self, mask: np.ndarray, until: np.ndarray | float) -> None:
         """Mark masked devices busy until ``until`` (scalar or per-device)."""
-        until = np.asarray(until, dtype=np.float64)
+        until = np.asarray(until, dtype=self.time_dtype)
         if until.ndim == 0:
-            until = np.full(self.num_devices, float(until))
+            until = np.full(self.num_devices, until, dtype=self.time_dtype)
         self.busy_until = np.where(mask, np.maximum(self.busy_until, until), self.busy_until)
 
     def fail(self, device_ids, until: float = np.inf) -> None:

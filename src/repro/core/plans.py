@@ -42,10 +42,17 @@ def random_plan_indices(
     return avail_idx[sel].astype(np.int32)
 
 
-def indices_to_plans(idx: np.ndarray, num_devices: int) -> np.ndarray:
-    """(count, n_sel) device ids -> (count, K) dense bool plans."""
+def indices_to_plans(idx: np.ndarray, num_devices: int,
+                     dtype=bool) -> np.ndarray:
+    """(count, n_sel) device ids -> (count, K) dense plans.
+
+    ``dtype=np.int8`` produces the scoring core's compact mirror directly
+    (0/1 bytes): ``scoring.score_plans`` converts bool plans to int8 before
+    the jitted reduction anyway, so int8-from-the-start skips one (P, K)
+    materialization on the hot path.
+    """
     idx = np.asarray(idx)
-    plans = np.zeros((idx.shape[0], num_devices), dtype=bool)
+    plans = np.zeros((idx.shape[0], num_devices), dtype=dtype)
     if idx.size:
         rows = np.repeat(np.arange(idx.shape[0]), idx.shape[1])
         plans[rows, idx.ravel()] = True
@@ -53,11 +60,12 @@ def indices_to_plans(idx: np.ndarray, num_devices: int) -> np.ndarray:
 
 
 def random_plans(
-    rng: np.random.Generator, available: np.ndarray, n_sel: int, count: int
+    rng: np.random.Generator, available: np.ndarray, n_sel: int, count: int,
+    dtype=bool
 ) -> np.ndarray:
     """(count, K) random valid plans drawn from the available set."""
     idx = random_plan_indices(rng, available, n_sel, count)
-    return indices_to_plans(idx, available.shape[0])
+    return indices_to_plans(idx, available.shape[0], dtype=dtype)
 
 
 def gumbel_topk_plans(

@@ -52,6 +52,13 @@ AUTO_NUMPY_MAX_DENSE = 1 << 18
 AUTO_NUMPY_MAX_INDEX = 1 << 20
 # Back-compat alias (pre-calibration single threshold == the dense one).
 AUTO_NUMPY_MAX = AUTO_NUMPY_MAX_DENSE
+# Sharded fleets dispatch on PER-SHARD size, against a much smaller floor:
+# a fleet someone bothered to shard should stay on the jax path (that is
+# the whole point of sharding), so numpy only wins when the per-shard
+# problem is genuinely tiny (below jit dispatch overhead). Comparing the
+# per-shard count against the single-lane caps would do the opposite —
+# make the numpy fallback MORE likely as shards are added.
+MIN_SHARD_ELEMENTS = 1 << 12
 
 _state = threading.local()
 _warned_pallas_fallback = False
@@ -68,16 +75,22 @@ def get_default_backend() -> str:
 
 
 def resolve_backend(backend: Optional[str], num_elements: int,
-                    form: str = "dense") -> str:
+                    form: str = "dense", num_shards: int = 1) -> str:
     """Concrete backend for an ``num_elements``-sized scoring problem.
 
     ``form`` is ``dense`` (a (P, K) sweep) or ``index`` (a (P, n_sel)
     gather): the auto dispatch uses a separate measured crossover per form.
+    With ``num_shards > 1`` the auto dispatch is SHARD-AWARE: it compares
+    the per-shard element count against ``MIN_SHARD_ELEMENTS`` instead of
+    the single-lane caps, so sharded fleets stay on the jax path.
     """
     b = backend if backend is not None else get_default_backend()
     if b not in VALID_BACKENDS:
         raise ValueError(f"backend {b!r} not in {VALID_BACKENDS}")
     if b == "auto":
+        if num_shards and num_shards > 1:
+            return ("numpy" if num_elements // num_shards <= MIN_SHARD_ELEMENTS
+                    else "jax")
         cap = AUTO_NUMPY_MAX_INDEX if form == "index" else AUTO_NUMPY_MAX_DENSE
         return "numpy" if num_elements <= cap else "jax"
     if b == "pallas" and not _pallas_available():
@@ -249,12 +262,17 @@ def score_plans(times: np.ndarray, counts: np.ndarray, plans: np.ndarray,
                 alpha: float = 1.0, beta: float = 1.0,
                 time_scale: float = 1.0, fairness_scale: float = 1.0,
                 delta_fairness: bool = True,
-                backend: Optional[str] = None) -> np.ndarray:
+                backend: Optional[str] = None,
+                num_shards: int = 1) -> np.ndarray:
     """Score P candidate plans: (K,) times, (K,) counts, (P, K) plans -> (P,).
 
     The one batched inner loop under every scheduler (Formula 2 over a
     candidate set). ``backend`` is ``numpy | jax | pallas | auto`` (None ->
-    the process default, normally ``auto``).
+    the process default, normally ``auto``). ``num_shards > 1`` shards the
+    fleet (K) axis across host platform devices (``repro.core.shard``) —
+    shard-local sufficient-statistics reductions with a cheap cross-shard
+    combine; an explicit ``pallas`` backend is single-device, so it also
+    routes to the sharded jax path when shards are requested.
     """
     times = np.asarray(times)
     counts = np.asarray(counts)
@@ -262,7 +280,7 @@ def score_plans(times: np.ndarray, counts: np.ndarray, plans: np.ndarray,
     if plans.ndim == 1:
         plans = plans[None, :]
     P, K = plans.shape
-    b = resolve_backend(backend, P * K)
+    b = resolve_backend(backend, P * K, num_shards=num_shards)
     if b == "numpy":
         return _score_numpy(times, counts, plans, alpha, beta,
                             time_scale, fairness_scale, delta_fairness)
@@ -270,13 +288,23 @@ def score_plans(times: np.ndarray, counts: np.ndarray, plans: np.ndarray,
     # backends never cancel two large sums (exact parity at fleet scale,
     # where cumulative counts grow without bound).
     counts_c = counts.astype(np.float64) - float(np.mean(counts))
+    if num_shards and num_shards > 1:
+        from repro.core import shard
+
+        stats = shard.plan_stats_sharded(times, counts_c, plans, "dense",
+                                         num_shards)
+        return _score_from_stats(stats, counts_c, alpha, beta,
+                                 time_scale, fairness_scale, delta_fairness)
     if b == "jax":
         import jax.numpy as jnp
 
         fn = _jax_score_fn(bool(delta_fairness))
+        # int8 plan mirrors (plans.indices_to_plans(..., dtype=np.int8))
+        # pass through without another (P, K) materialization.
+        p8 = plans if plans.dtype == np.int8 else plans.astype(np.int8)
         out = fn(jnp.asarray(times, jnp.float32),
                  jnp.asarray(counts_c, jnp.float32),
-                 jnp.asarray(plans.astype(np.int8)),
+                 jnp.asarray(p8),
                  jnp.float32(alpha), jnp.float32(beta),
                  jnp.float32(time_scale), jnp.float32(fairness_scale))
         return np.asarray(out, dtype=np.float64)
@@ -290,7 +318,8 @@ def score_plan_indices(times: np.ndarray, counts: np.ndarray,
                        idx: np.ndarray, alpha: float = 1.0, beta: float = 1.0,
                        time_scale: float = 1.0, fairness_scale: float = 1.0,
                        delta_fairness: bool = True,
-                       backend: Optional[str] = None) -> np.ndarray:
+                       backend: Optional[str] = None,
+                       num_shards: int = 1) -> np.ndarray:
     """Score P candidate plans given in INDEX form: (P, n_sel) device ids.
 
     The fleet fast path: the vectorized candidate generators
@@ -299,6 +328,8 @@ def score_plan_indices(times: np.ndarray, counts: np.ndarray,
     instead of a P*K dense sweep — the difference between ~2 and ~2000 ms
     at K=100k, P=4096. Semantically identical to ``score_plans`` on the
     scattered dense plans (each row selects its n_sel ids exactly once).
+    ``num_shards > 1`` shards the fleet axis: each shard owns a K/N block
+    of devices and masks the gather to the ids it owns.
     """
     times = np.asarray(times)
     counts = np.asarray(counts)
@@ -311,7 +342,7 @@ def score_plan_indices(times: np.ndarray, counts: np.ndarray,
         if delta_fairness:
             return np.zeros(P, dtype=np.float64)
         return np.full(P, beta * float(np.var(counts)) / fairness_scale)
-    b = resolve_backend(backend, P * S, form="index")
+    b = resolve_backend(backend, P * S, form="index", num_shards=num_shards)
     if b == "numpy":
         t = times[idx].max(axis=1) / time_scale
         w = 2.0 * counts + 1.0
@@ -327,6 +358,13 @@ def score_plan_indices(times: np.ndarray, counts: np.ndarray,
     import jax.numpy as jnp
 
     counts_c = counts.astype(np.float64) - float(np.mean(counts))
+    if num_shards and num_shards > 1:
+        from repro.core import shard
+
+        stats = shard.plan_stats_sharded(times, counts_c, idx, "index",
+                                         num_shards)
+        return _score_from_stats(stats, counts_c, alpha, beta,
+                                 time_scale, fairness_scale, delta_fairness)
     fn = _jax_score_idx_fn(bool(delta_fairness))
     out = fn(jnp.asarray(times, jnp.float32),
              jnp.asarray(counts_c, jnp.float32),

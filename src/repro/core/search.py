@@ -46,11 +46,46 @@ on chosen-plan cost, which ``benchmarks/bench_sched.py`` gates on.
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core.plans import plan_from_indices
+
+logger = logging.getLogger(__name__)
+
+
+def _usable_search_shards(num_shards, rows: int, pairs: bool = False) -> int:
+    """Shard count a fused searcher can actually use for ``rows`` parallel
+    units (SA chains / GA population / BODS candidates): falls back to the
+    single lane when the process lacks devices, when ``rows`` does not
+    split evenly, or (``pairs``) when the per-shard block would break the
+    GA's consecutive-pair crossover. Falling back changes NOTHING but the
+    partitioning — the single-lane program is the num_shards=1 special
+    case of the same math."""
+    n = int(num_shards or 1)
+    if n <= 1:
+        return 1
+    reason = None
+    try:
+        from repro.core import shard
+
+        if n > shard.shard_capacity():
+            reason = (f"num_shards={n} exceeds jax.device_count(); "
+                      "launch via repro.launch.bootstrap to size the "
+                      "host platform")
+    except Exception:  # pragma: no cover - no jax runtime
+        reason = "no jax runtime"
+    if reason is None and rows % n:
+        reason = f"{rows} search rows do not split across {n} shards"
+    if reason is None and pairs and (rows // n) % 2:
+        reason = (f"per-shard block {rows // n} is odd (pair crossover "
+                  "needs even blocks)")
+    if reason is not None:
+        logger.debug("fused search falling back to single lane: %s", reason)
+        return 1
+    return n
 
 # ---- traced building blocks ---------------------------------------------
 
@@ -205,12 +240,17 @@ def _check_avail(avail_idx: np.ndarray, n_sel: int) -> None:
 
 
 @functools.lru_cache(maxsize=None)
-def _sa_fn(steps: int, chains: int, n_sel: int, delta_fairness: bool):
+def _sa_fn(steps: int, chains: int, n_sel: int, delta_fairness: bool,
+           num_shards: int = 1):
     import jax
     import jax.numpy as jnp
 
-    def run(init_idx, times, counts_c, pos, cand, accept_u,
-            alpha, beta, ts, fs, t0, cooling):
+    def chains_run(init_idx, times, counts_c, pos, cand, accept_u,
+                   alpha, beta, ts, fs, t0, cooling):
+        # Anneal a block of chains; per-chain bests are returned so the
+        # cross-chain argmin can run OUTSIDE the (possibly sharded) body.
+        # Chains never interact mid-anneal, so partitioning this body over
+        # the chain axis is bitwise-identical to the single lane.
         costs = plan_costs_idx(times, counts_c, init_idx, alpha, beta, ts,
                                fs, delta_fairness)
 
@@ -239,6 +279,24 @@ def _sa_fn(steps: int, chains: int, n_sel: int, delta_fairness: bool):
         carry0 = (init_idx, costs, init_idx, costs, t0)
         (_, _, best_i, best_c, _), _ = jax.lax.scan(
             body, carry0, (pos, cand, accept_u))
+        return best_i, best_c
+
+    if num_shards > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.shard import fleet_mesh
+
+        chains_run = shard_map(
+            chains_run, mesh=fleet_mesh(num_shards),
+            in_specs=(P("fleet", None), P(None), P(None),
+                      P(None, "fleet"), P(None, "fleet"), P(None, "fleet"),
+                      P(), P(), P(), P(), P(), P()),
+            out_specs=(P("fleet", None), P("fleet")),
+            check_rep=False)
+
+    def run(*args):
+        best_i, best_c = chains_run(*args)
         ci = jnp.argmin(best_c)
         return best_i[ci], best_c[ci]
 
@@ -250,14 +308,18 @@ def sa_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
               time_scale: float, fairness_scale: float, delta_fairness: bool,
               steps: int, chains: int, t0: float, cooling: float,
               greedy_seed: bool = True,
-              avail_idx: Optional[np.ndarray] = None) -> np.ndarray:
+              avail_idx: Optional[np.ndarray] = None,
+              num_shards: int = 1) -> np.ndarray:
     """One fused multi-chain SA decision -> (K,) bool plan.
 
     ``chains`` plans anneal in parallel for ``steps`` scan iterations
     (``chains * steps`` cost evaluations in ONE jitted call); the best plan
     any chain ever visited is returned. All randomness is pre-drawn from
     ``rng`` on the host, so decisions are reproducible under the
-    scheduler's seed and the scan body is PRNG-free.
+    scheduler's seed and the scan body is PRNG-free. With ``num_shards``
+    > 1 the chain axis partitions across host platform devices
+    (bitwise-identical result: chains are independent and the noise is
+    host-drawn once, regardless of shard count).
     """
     import jax.numpy as jnp
 
@@ -269,7 +331,8 @@ def sa_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
     if greedy_seed:
         init[0] = _greedy_indices(np.asarray(times), avail_idx, n_sel)
     pos, cand, u = _swap_noise(rng, avail_idx, steps, chains, n_sel)
-    fn = _sa_fn(int(steps), int(chains), int(n_sel), bool(delta_fairness))
+    fn = _sa_fn(int(steps), int(chains), int(n_sel), bool(delta_fairness),
+                _usable_search_shards(num_shards, chains))
     best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
                      jnp.asarray(_center(counts)), jnp.asarray(pos),
                      jnp.asarray(cand), jnp.asarray(u),
@@ -282,18 +345,69 @@ def sa_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
 # ---- (b) fused genetic algorithm -----------------------------------------
 
 
+def _ga_children_block(pop, cost, ta, tb, cu_l, mu_l, mpos_l, mcand_l,
+                       off, rows, n_sel: int, mutation_rate):
+    """Rows ``[off, off + rows)`` of the next GA generation, computed from
+    the FULL (P, S) population and (P,) costs but only the LOCAL slices of
+    the crossover/mutation noise. The single lane calls this with
+    ``off=0, rows=P``; the sharded executor calls it per shard with an even
+    block so consecutive parent pairs never straddle shards — either way
+    the math below is the same ops in the same order.
+
+    Tournament selection (size 2) runs on the full index arrays (O(P*S),
+    cheap) and the block is carved out of the parents; the expensive
+    O(rows * S^2) membership matrices only ever see the local block.
+
+    Slot-wise uniform crossover between consecutive parent pairs:
+    slot j of a child takes the OTHER parent's j-th device iff
+    the coin says swap and that device is a single (absent from
+    this parent) — entries adopted from the other parent are
+    then distinct from every kept entry, so children stay
+    duplicate-free and exactly n_sel-sized with no repair/sort
+    step (``lax.top_k`` costs ~1 ms/call on CPU and would
+    dominate the loop). Unlike the host GA's bitwise crossover
+    + repair, a shared device CAN be dropped when its slot swaps
+    to a single — a deliberate trade for the sort-free form; the
+    parity gate measures the outcome, not the operator. The two
+    children use complementary coins, mirroring the host GA's
+    shared crossover mask.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    parents = jnp.where((cost[ta] <= cost[tb])[:, None], pop[ta], pop[tb])
+    par_l = jax.lax.dynamic_slice_in_dim(parents, off, rows, 0)
+    pairs = rows // 2
+    p0, p1 = par_l[0:2 * pairs:2], par_l[1:2 * pairs:2]
+    m0 = jnp.any(p0[:, :, None] == p1[:, None, :], axis=-1)
+    m1 = jnp.any(p1[:, :, None] == p0[:, None, :], axis=-1)
+    swap = cu_l < 0.5
+    c0 = jnp.where(swap & ~m1, p1, p0)
+    c1 = jnp.where(~swap & ~m0, p0, p1)
+    children = jnp.stack([c0, c1], axis=1).reshape(2 * pairs, n_sel)
+    if rows != 2 * pairs:  # odd block: last parent passes through
+        children = jnp.concatenate([children, par_l[-1:]])
+    # Mutation: swap one selected device for one free device.
+    swapped, moved = _swap_into(children, mpos_l, mcand_l)
+    apply = (mu_l < mutation_rate) & moved
+    return jnp.where(apply[:, None], swapped, children)
+
+
 @functools.lru_cache(maxsize=None)
 def _ga_fn(population: int, generations: int, n_sel: int,
-           delta_fairness: bool):
+           delta_fairness: bool, num_shards: int = 1):
     import jax
     import jax.numpy as jnp
 
     P = population
     half = P // 2
     S = n_sel
+    N = num_shards
+    Pb = P // N  # rows this shard owns (P itself when unsharded)
 
-    def run(init_idx, times, counts_c, tourn_a, tourn_b, cross_u,
-            mut_u, mut_pos, mut_cand, alpha, beta, ts, fs, mutation_rate):
+    def run_single(init_idx, times, counts_c, tourn_a, tourn_b, cross_u,
+                   mut_u, mut_pos, mut_cand, alpha, beta, ts, fs,
+                   mutation_rate):
         def body(carry, xs):
             pop, best_i, best_c = carry
             ta, tb, cu, mu, mpos, mcand = xs
@@ -303,35 +417,8 @@ def _ga_fn(population: int, generations: int, n_sel: int,
             better = cost[i] < best_c
             best_i = jnp.where(better, pop[i], best_i)
             best_c = jnp.where(better, cost[i], best_c)
-            # Tournament selection (size 2), whole population at once.
-            parents = jnp.where((cost[ta] <= cost[tb])[:, None],
-                                pop[ta], pop[tb])
-            # Slot-wise uniform crossover between consecutive parent pairs:
-            # slot j of a child takes the OTHER parent's j-th device iff
-            # the coin says swap and that device is a single (absent from
-            # this parent) — entries adopted from the other parent are
-            # then distinct from every kept entry, so children stay
-            # duplicate-free and exactly n_sel-sized with no repair/sort
-            # step (``lax.top_k`` costs ~1 ms/call on CPU and would
-            # dominate the loop). Unlike the host GA's bitwise crossover
-            # + repair, a shared device CAN be dropped when its slot swaps
-            # to a single — a deliberate trade for the sort-free form; the
-            # parity gate measures the outcome, not the operator. The two
-            # children use complementary coins, mirroring the host GA's
-            # shared crossover mask.
-            p0, p1 = parents[0:2 * half:2], parents[1:2 * half:2]
-            m0 = jnp.any(p0[:, :, None] == p1[:, None, :], axis=-1)
-            m1 = jnp.any(p1[:, :, None] == p0[:, None, :], axis=-1)
-            swap = cu < 0.5
-            c0 = jnp.where(swap & ~m1, p1, p0)
-            c1 = jnp.where(~swap & ~m0, p0, p1)
-            children = jnp.stack([c0, c1], axis=1).reshape(2 * half, S)
-            if P != 2 * half:  # odd population: last parent passes through
-                children = jnp.concatenate([children, parents[-1:]])
-            # Mutation: swap one selected device for one free device.
-            swapped, moved = _swap_into(children, mpos, mcand)
-            apply = (mu < mutation_rate) & moved
-            children = jnp.where(apply[:, None], swapped, children)
+            children = _ga_children_block(pop, cost, ta, tb, cu, mu, mpos,
+                                          mcand, 0, P, S, mutation_rate)
             # Elitism: the best plan seen so far survives in slot 0.
             children = children.at[0].set(best_i)
             return (children, best_i, best_c), None
@@ -347,6 +434,76 @@ def _ga_fn(population: int, generations: int, n_sel: int,
         return (jnp.where(better, pop[i], best_i),
                 jnp.where(better, cost[i], best_c))
 
+    if N == 1:
+        return jax.jit(run_single)
+
+    # Data-parallel sharded executor: each shard scores and breeds its own
+    # Pb-row block, with one tiled ``all_gather`` of (population, cost) per
+    # generation so tournament selection and elitism see the GLOBAL state —
+    # the recombination trajectory is exactly the single lane's. Noise
+    # arrays stay replicated; each shard slices its rows (pair noise at
+    # off/2 since crossover coins are drawn per PAIR).
+    def run_shard(init_idx, times, counts_c, tourn_a, tourn_b, cross_u,
+                  mut_u, mut_pos, mut_cand, alpha, beta, ts, fs,
+                  mutation_rate):
+        sid = jax.lax.axis_index("fleet")
+        off = sid * Pb
+
+        def body(carry, xs):
+            pop_l, best_i, best_c = carry
+            ta, tb, cu, mu, mpos, mcand = xs
+            cost_l = plan_costs_idx(times, counts_c, pop_l, alpha, beta,
+                                    ts, fs, delta_fairness)
+            pop = jax.lax.all_gather(pop_l, "fleet", tiled=True)
+            cost = jax.lax.all_gather(cost_l, "fleet", tiled=True)
+            i = jnp.argmin(cost)
+            better = cost[i] < best_c
+            best_i = jnp.where(better, pop[i], best_i)
+            best_c = jnp.where(better, cost[i], best_c)
+            cu_l = jax.lax.dynamic_slice_in_dim(cu, sid * (Pb // 2),
+                                                Pb // 2, 0)
+            mu_l = jax.lax.dynamic_slice_in_dim(mu, off, Pb, 0)
+            mpos_l = jax.lax.dynamic_slice_in_dim(mpos, off, Pb, 0)
+            mcand_l = jax.lax.dynamic_slice_in_dim(mcand, off, Pb, 0)
+            children = _ga_children_block(pop, cost, ta, tb, cu_l, mu_l,
+                                          mpos_l, mcand_l, off, Pb, S,
+                                          mutation_rate)
+            # Elitism lives in GLOBAL slot 0, i.e. shard 0's local slot 0.
+            children = children.at[0].set(
+                jnp.where(sid == 0, best_i, children[0]))
+            return (children, best_i, best_c), None
+
+        carry0 = (init_idx, init_idx[0], jnp.float32(jnp.inf))
+        (pop_l, best_i, best_c), _ = jax.lax.scan(
+            body, carry0,
+            (tourn_a, tourn_b, cross_u, mut_u, mut_pos, mut_cand))
+        cost_l = plan_costs_idx(times, counts_c, pop_l, alpha, beta, ts,
+                                fs, delta_fairness)
+        pop = jax.lax.all_gather(pop_l, "fleet", tiled=True)
+        cost = jax.lax.all_gather(cost_l, "fleet", tiled=True)
+        i = jnp.argmin(cost)
+        better = cost[i] < best_c
+        return (jnp.where(better, pop[i], best_i)[None],
+                jnp.where(better, cost[i], best_c)[None])
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Psp
+
+    from repro.core.shard import fleet_mesh
+
+    rep = Psp()
+    sharded = shard_map(
+        run_shard, mesh=fleet_mesh(N),
+        in_specs=(Psp("fleet", None), rep, rep, rep, rep, rep,
+                  rep, rep, rep, rep, rep, rep, rep, rep),
+        out_specs=(Psp("fleet", None), Psp("fleet")),
+        check_rep=False)
+
+    def run(*args):
+        best_i, best_c = sharded(*args)
+        # Every shard returns the same global best; row 0 is canonical.
+        return best_i[0], best_c[0]
+
     return jax.jit(run)
 
 
@@ -355,9 +512,13 @@ def ga_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
               time_scale: float, fairness_scale: float, delta_fairness: bool,
               population: int, generations: int, mutation_rate: float,
               greedy_seed: bool = True,
-              avail_idx: Optional[np.ndarray] = None) -> np.ndarray:
+              avail_idx: Optional[np.ndarray] = None,
+              num_shards: int = 1) -> np.ndarray:
     """One fused GA decision -> (K,) bool plan (all generations in ONE
-    jitted ``lax.scan`` call; index-form population, pre-drawn noise)."""
+    jitted ``lax.scan`` call; index-form population, pre-drawn noise).
+    With ``num_shards`` > 1 the population breeds data-parallel across
+    host platform devices (same trajectory: per-generation all_gather
+    keeps selection/elitism global, noise is host-drawn once)."""
     import jax.numpy as jnp
 
     avail = np.asarray(available, dtype=bool)
@@ -373,7 +534,8 @@ def ga_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
     cross_u = rng.random((G, half, n_sel)).astype(np.float32)
     mut_u = rng.random((G, P)).astype(np.float32)
     mut_pos, mut_cand, _ = _swap_noise(rng, avail_idx, G, P, n_sel)
-    fn = _ga_fn(int(P), int(G), int(n_sel), bool(delta_fairness))
+    fn = _ga_fn(int(P), int(G), int(n_sel), bool(delta_fairness),
+                _usable_search_shards(num_shards, P, pairs=True))
     best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
                      jnp.asarray(_center(counts)), jnp.asarray(tourn[0]),
                      jnp.asarray(tourn[1]), jnp.asarray(cross_u),
@@ -388,12 +550,67 @@ def ga_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
 # ---- (c) batched BODS acquisition ----------------------------------------
 
 
+def _matern52(sq):
+    import jax.numpy as jnp
+
+    r = jnp.sqrt(jnp.maximum(sq, 1e-12))
+    return (1.0 + jnp.sqrt(5.0) * r + 5.0 * sq / 3.0) * jnp.exp(-jnp.sqrt(5.0) * r)
+
+
+def gp_fit(F, resid, valid, noise):
+    """Masked Matern-5/2 GP fit over the observation ring: returns the
+    Cholesky factor, the dual weights ``K_nn^-1 (resid * m)``, and the
+    float mask ``m``. Split out of ``ei_scores`` so the sharded BODS
+    acquisition can fit ONCE per shard and score only its local candidate
+    block against it."""
+    import jax
+    import jax.numpy as jnp
+
+    m = valid.astype(jnp.float32)
+    mm = m[:, None] * m[None, :]
+    d_nn = jnp.sum((F[:, None, :] - F[None, :, :]) ** 2, -1)
+    K_nn = _matern52(d_nn) * mm + (1.0 - mm) * jnp.eye(F.shape[0])
+    K_nn = K_nn + (noise + 1e-6) * jnp.eye(F.shape[0])
+    chol = jnp.linalg.cholesky(K_nn)
+    w = jax.scipy.linalg.cho_solve((chol, True), resid * m)
+    return chol, w, m
+
+
+def gp_posterior(chol, w, m, F, cand_feats, cand_est):
+    """Posterior (mean, stddev) of a candidate block under a ``gp_fit``
+    model; the prior mean enters through ``cand_est``."""
+    import jax
+    import jax.numpy as jnp
+
+    d_nc = jnp.sum((F[:, None, :] - cand_feats[None, :, :]) ** 2, -1)
+    K_nc = _matern52(d_nc) * m[:, None]
+    mu_c = cand_est + K_nc.T @ w              # posterior mean, candidates
+    v = jax.scipy.linalg.solve_triangular(chol, K_nc, lower=True)
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
+    return mu_c, jnp.sqrt(var)
+
+
+def ei_from_posterior(mu_c, sigma, best):
+    """Expected Improvement of each candidate against incumbent ``best``
+    (a plugin incumbent: pass ``jnp.min(mu_c)`` — or, sharded, the pmin
+    over every shard's ``mu_c`` so all shards improve against the same
+    global incumbent)."""
+    import jax
+
+    z = (best - mu_c) / sigma
+    cdf = jax.scipy.stats.norm.cdf(z)
+    pdf = jax.scipy.stats.norm.pdf(z)
+    return (best - mu_c) * cdf + sigma * pdf
+
+
 def ei_scores(F, resid, valid, cand_feats, cand_est, noise):
     """Expected Improvement under the masked Matern-5/2 GP posterior.
 
     Traced core shared by the host BODS scheduler (which jits it directly),
     the fused acquisition below (which inlines it into one decision graph),
-    and ``ei_scores_jobs`` (which vmaps it over the job axis). See
+    and ``ei_scores_jobs`` (which vmaps it over the job axis). Composed
+    from ``gp_fit`` / ``gp_posterior`` / ``ei_from_posterior`` above (the
+    sharded acquisition uses the pieces directly). See
     ``schedulers/bods.py`` for the modelling rationale (residual GP over a
     low-dimensional feature map, plugin incumbent within the round; the
     prior mean enters through ``cand_est``, so the observations' own
@@ -404,38 +621,14 @@ def ei_scores(F, resid, valid, cand_feats, cand_est, noise):
     cand_est: (P,) estimated candidate costs (same normalization as
     ``resid``). Returns (P,) EI (higher = better).
     """
-    import jax
     import jax.numpy as jnp
 
-    m = valid.astype(jnp.float32)
-    mm = m[:, None] * m[None, :]
-
-    def matern52(sq):
-        r = jnp.sqrt(jnp.maximum(sq, 1e-12))
-        return (1.0 + jnp.sqrt(5.0) * r + 5.0 * sq / 3.0) * jnp.exp(-jnp.sqrt(5.0) * r)
-
-    d_nn = jnp.sum((F[:, None, :] - F[None, :, :]) ** 2, -1)
-    K_nn = matern52(d_nn) * mm + (1.0 - mm) * jnp.eye(F.shape[0])
-    K_nn = K_nn + (noise + 1e-6) * jnp.eye(F.shape[0])
-
-    d_nc = jnp.sum((F[:, None, :] - cand_feats[None, :, :]) ** 2, -1)
-    K_nc = matern52(d_nc) * m[:, None]
-
-    chol = jnp.linalg.cholesky(K_nn)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), resid * m)
-    mu_c = cand_est + K_nc.T @ alpha          # posterior mean, candidates
-    v = jax.scipy.linalg.solve_triangular(chol, K_nc, lower=True)
-    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
-    sigma = jnp.sqrt(var)
-
+    chol, w, m = gp_fit(F, resid, valid, noise)
+    mu_c, sigma = gp_posterior(chol, w, m, F, cand_feats, cand_est)
     # WITHIN-ROUND plugin incumbent (see bods.py): the best posterior-mean
     # candidate of THIS round; EI arbitrates exploitation vs exploration
     # among the current feasible set.
-    best = jnp.min(mu_c)
-    z = (best - mu_c) / sigma
-    cdf = jax.scipy.stats.norm.cdf(z)
-    pdf = jax.scipy.stats.norm.pdf(z)
-    return (best - mu_c) * cdf + sigma * pdf
+    return ei_from_posterior(mu_c, sigma, jnp.min(mu_c))
 
 
 @functools.lru_cache(maxsize=None)
@@ -499,42 +692,123 @@ def featurize_plans(times, counts_c, counts_zero, mu, plans, ts, fs,
 
 @functools.lru_cache(maxsize=None)
 def _bods_fn(num_candidates: int, n_mut: int, n_sel: int,
-             delta_fairness: bool, local_search: bool):
+             delta_fairness: bool, local_search: bool, num_shards: int = 1):
     import jax
     import jax.numpy as jnp
 
     P = num_candidates
     n_rand = P // 4
-    n_str = P - n_rand
+    N = num_shards
+    Pb = P // N  # candidates this shard owns (P itself when unsharded)
 
-    def run(key, times, counts_c, counts_zero, avail, mu, mutants,
-            use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs, noise):
+    def gen_candidates(seed, ids, times, counts_c, avail, mutants, use_base):
+        """(B,) global candidate ids -> (B, K) bool plans. PRNG is PER
+        CANDIDATE (``fold_in`` of the decision seed by candidate id), so the
+        candidate set is a pure function of (seed, id) — invariant to how
+        the candidate axis is partitioned across shards. Threefry keys on
+        purpose: the fast ``rbg`` impl draws DIFFERENT bits for the same
+        key under different vmap batch sizes, which would make the
+        candidate set depend on the shard count. Layout matches the host
+        path: ids [0, n_rand) uniform Gumbel top-k, the rest structured
+        (availability-logit) Gumbel top-k, and when local search is armed
+        ids [0, n_mut) become repaired mutants of the incumbent."""
         K = times.shape[0]
-        k_rand, k_w1, k_w2, k_str, k_rep = jax.random.split(key, 5)
-        # Candidate generation: random + structured Gumbel top-k.
-        rand = _gumbel_plans(k_rand, jnp.zeros((n_rand, K)), avail, n_sel)
         t_norm = _norm01_traced(times, avail)
         c_norm = _norm01_traced(counts_c, jnp.ones(K, bool))
-        w_time = jax.random.uniform(k_w1, (n_str, 1), minval=0.0, maxval=6.0)
-        w_fair = jax.random.uniform(k_w2, (n_str, 1), minval=0.0, maxval=4.0)
-        logits = -w_time * t_norm[None, :] - w_fair * c_norm[None, :]
-        cands = jnp.concatenate([rand, _gumbel_plans(k_str, logits, avail,
-                                                     n_sel)])
-        if local_search:
-            # Host-prepared mutants of the best observed plan, repaired onto
-            # the feasible set in-graph; they overwrite the first n_mut
-            # random slots exactly like the host path.
-            fixed = repair_plans_jax(k_rep, mutants, avail, n_sel)
-            keep = use_base & jnp.ones((n_mut, 1), bool)
-            cands = cands.at[:n_mut].set(
-                jnp.where(keep, fixed, cands[:n_mut]))
+        base_key = jax.random.key(seed)
+
+        def one(cid):
+            k = jax.random.fold_in(base_key, cid)
+            kg, kw1, kw2, kr = jax.random.split(k, 4)
+            w_time = jax.random.uniform(kw1, (), minval=0.0, maxval=6.0)
+            w_fair = jax.random.uniform(kw2, (), minval=0.0, maxval=4.0)
+            logits = jnp.where(cid >= n_rand,
+                               -w_time * t_norm - w_fair * c_norm, 0.0)
+            g = jnp.where(avail, logits + jax.random.gumbel(kg, (K,)),
+                          -jnp.inf)
+            _, ti = jax.lax.top_k(g, n_sel)
+            plan = jnp.zeros((K,), bool).at[ti].set(True) & avail
+            if local_search:
+                # Row-wise twin of ``repair_plans_jax`` on this candidate's
+                # mutant of the best observed plan.
+                mut = mutants[jnp.minimum(cid, n_mut - 1)]
+                rk = jnp.where(avail, (mut & avail) +
+                               jax.random.uniform(kr, (K,)), -jnp.inf)
+                _, ri = jax.lax.top_k(rk, n_sel)
+                rplan = jnp.zeros((K,), bool).at[ri].set(True) & avail
+                plan = jnp.where(use_base & (cid < n_mut), rplan, plan)
+            return plan
+
+        return jax.vmap(one)(ids)
+
+    def block(seed, ids, times, counts_c, counts_zero, avail, mu, mutants,
+              use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs,
+              noise):
+        """One candidate block end-to-end: generation, featurization, GP
+        posterior. Returns (plans, est cost, posterior mean, stddev)."""
+        cands = gen_candidates(seed, ids, times, counts_c, avail, mutants,
+                               use_base)
         feats, est_time, dfair = featurize_plans(
             times, counts_c, counts_zero, mu, cands, ts, fs, n_sel,
             delta_fairness)
         cand_est = alpha * est_time + beta * dfair
-        ei = ei_scores(F, resid, valid, feats, cand_est * inv_sd, noise)
-        choice = jnp.argmax(ei)
-        return cands[choice], cand_est[choice]
+        chol, w, m = gp_fit(F, resid, valid, noise)
+        mu_c, sigma = gp_posterior(chol, w, m, F, feats, cand_est * inv_sd)
+        return cands, cand_est, mu_c, sigma
+
+    if N == 1:
+        def run(seed, times, counts_c, counts_zero, avail, mu, mutants,
+                use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs,
+                noise):
+            ids = jnp.arange(P, dtype=jnp.int32)
+            cands, cand_est, mu_c, sigma = block(
+                seed, ids, times, counts_c, counts_zero, avail, mu, mutants,
+                use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs,
+                noise)
+            ei = ei_from_posterior(mu_c, sigma, jnp.min(mu_c))
+            choice = jnp.argmax(ei)
+            return cands[choice], cand_est[choice]
+
+        return jax.jit(run)
+
+    # Candidate-axis sharding: each shard generates/featurizes/scores its
+    # own Pb candidates (the per-candidate PRNG keeps the candidate SET
+    # identical to the single lane), the plugin incumbent is the pmin of
+    # posterior means across shards, and each shard emits its local EI
+    # winner for a tiny host-side final argmax.
+    def run_shard(seed, times, counts_c, counts_zero, avail, mu, mutants,
+                  use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs,
+                  noise):
+        sid = jax.lax.axis_index("fleet")
+        ids = sid * Pb + jnp.arange(Pb, dtype=jnp.int32)
+        cands, cand_est, mu_c, sigma = block(
+            seed, ids, times, counts_c, counts_zero, avail, mu, mutants,
+            use_base, F, resid, valid, inv_sd, alpha, beta, ts, fs, noise)
+        best = jax.lax.pmin(jnp.min(mu_c), "fleet")
+        ei = ei_from_posterior(mu_c, sigma, best)
+        c = jnp.argmax(ei)
+        return cands[c][None], cand_est[c][None], ei[c][None], ids[c][None]
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Psp
+
+    from repro.core.shard import fleet_mesh
+
+    rep = Psp()
+    sharded = shard_map(
+        run_shard, mesh=fleet_mesh(N), in_specs=(rep,) * 17,
+        out_specs=(Psp("fleet", None), Psp("fleet"), Psp("fleet"),
+                   Psp("fleet")),
+        check_rep=False)
+
+    def run(*args):
+        plans, ests, eis, gids = sharded(*args)
+        # Max EI wins; ties break to the LOWEST global candidate id,
+        # matching the single lane's first-argmax semantics.
+        order = jnp.where(eis == jnp.max(eis), gids,
+                          jnp.iinfo(jnp.int32).max)
+        wi = jnp.argmin(order)
+        return plans[wi], ests[wi]
 
     return jax.jit(run)
 
@@ -565,17 +839,19 @@ def bods_acquire(rng: np.random.Generator, times: np.ndarray,
                  time_scale: float, fairness_scale: float,
                  delta_fairness: bool, num_candidates: int, n_mut: int,
                  local_search: bool, gp_noise: float,
-                 avail_idx: Optional[np.ndarray] = None
-                 ) -> Tuple[np.ndarray, float]:
+                 avail_idx: Optional[np.ndarray] = None,
+                 num_shards: int = 1) -> Tuple[np.ndarray, float]:
     """One fused BODS decision: (chosen (K,) bool plan, its estimated cost).
 
     Candidate generation, featurization, GP posterior and EI argmax run in
     one jitted call; only the observation-ring slicing, the residual
     normalization and the tiny local-search mutant loop stay on the host.
-    The in-graph Gumbel draws use the fast ``rbg`` PRNG (the (P, K) noise
-    block is the one unavoidable K-wide draw in this module).
+    The in-graph Gumbel draws use PER-CANDIDATE threefry keys folded from
+    one decision seed (the (P, K) noise block is the one unavoidable
+    K-wide draw in this module), so with ``num_shards`` > 1 the candidate
+    axis partitions across host platform devices without changing the
+    candidate set.
     """
-    import jax
     import jax.numpy as jnp
 
     avail = np.asarray(available, dtype=bool)
@@ -590,10 +866,11 @@ def bods_acquire(rng: np.random.Generator, times: np.ndarray,
     else:
         mutants = np.zeros((n_mut, avail.shape[0]), dtype=bool)
     fn = _bods_fn(int(num_candidates), int(n_mut), int(n_sel),
-                  bool(delta_fairness), bool(local_search))
-    key = jax.random.key(int(rng.integers(0, 2**31 - 1)), impl="rbg")
+                  bool(delta_fairness), bool(local_search),
+                  _usable_search_shards(num_shards, num_candidates))
+    seed = jnp.uint32(int(rng.integers(0, 2**31 - 1)))
     plan, cand_est = fn(
-        key, jnp.asarray(times, jnp.float32), jnp.asarray(_center(counts)),
+        seed, jnp.asarray(times, jnp.float32), jnp.asarray(_center(counts)),
         jnp.asarray(np.asarray(counts) == 0), jnp.asarray(avail),
         jnp.asarray(mu, jnp.float32), jnp.asarray(mutants),
         jnp.asarray(bool(use_base)), jnp.asarray(F),

@@ -6,9 +6,12 @@
   python -m repro.experiment.cli list
 
 ``preset --arg k=v`` feeds the preset factory (values parsed as JSON, bare
-strings allowed); ``--set k=v`` overrides top-level ExperimentSpec fields on
-the materialized spec — including the policy axis (``--set policy=<name>``
-loads a gym-trained scheduler policy from the zoo; train one with
+strings allowed); ``--set k=v`` overrides ExperimentSpec fields on the
+materialized spec — top-level, or nested via a dotted key (``--set
+fleet.num_shards=4`` shards the fleet axis across host platform devices;
+launch under ``repro.launch.bootstrap`` / ``XLA_FLAGS`` so the devices
+exist). Other axes: the policy axis (``--set policy=<name>`` loads a
+gym-trained scheduler policy from the zoo; train one with
 ``python -m repro.gym train``) and the search-backend axis
 (``--set search_backend=host|fused`` flips the SA/genetic/BODS plan search
 between the jitted on-device loops and the sequential numpy reference;
@@ -29,15 +32,33 @@ from repro.experiment.spec import ExperimentResult, ExperimentSpec
 
 
 def _parse_kv(pairs) -> Dict:
+    """``k=v`` pairs -> dict (values parsed as JSON, bare strings allowed).
+
+    Dotted keys address nested spec axes: ``fleet.num_shards=4`` becomes
+    ``{"fleet": {"num_shards": 4}}``, which ``ExperimentSpec.replace``
+    merges over the current sub-spec. Dotted pairs for the same axis
+    accumulate into one merge dict."""
     out = {}
     for pair in pairs or []:
         if "=" not in pair:
             raise SystemExit(f"expected key=value, got {pair!r}")
         k, v = pair.split("=", 1)
         try:
-            out[k] = json.loads(v)
+            v = json.loads(v)
         except json.JSONDecodeError:
-            out[k] = v  # bare string
+            pass  # bare string
+        if "." in k:
+            root, sub = k.split(".", 1)
+            node = out.setdefault(root, {})
+            if not isinstance(node, dict):
+                raise SystemExit(
+                    f"--set {k}: {root!r} already set to a non-dict value")
+            node[sub] = v
+        else:
+            if isinstance(v, dict) and isinstance(out.get(k), dict):
+                out[k].update(v)
+            else:
+                out[k] = v
     return out
 
 

@@ -118,10 +118,12 @@ class CostSpec:
     calibrate: bool = True
 
     def build(self, pool: DevicePool, taus: List[float], n_sel: int,
-              scoring_backend: str = "auto") -> CostModel:
+              scoring_backend: str = "auto",
+              num_shards: int = 1) -> CostModel:
         cm = CostModel(pool, alpha=self.alpha, beta=self.beta,
                        delta_fairness=self.delta_fairness,
-                       scoring_backend=scoring_backend)
+                       scoring_backend=scoring_backend,
+                       num_shards=num_shards)
         if self.calibrate:
             cm.calibrate(taus, n_sel=n_sel)
         return cm
@@ -138,7 +140,12 @@ class FleetSpec:
     selects the plan-scoring path: ``numpy | jax | pallas | auto``;
     ``search_backend`` selects the plan-SEARCH path of the searching
     schedulers (SA/genetic/BODS): ``fused`` (jitted on-device loops,
-    ``repro.core.search``) or ``host`` (the sequential numpy reference).
+    ``repro.core.search``) or ``host`` (the sequential numpy reference);
+    ``num_shards`` shards the fleet (K) axis of scoring and the parallel
+    axes of the fused searchers across host platform devices
+    (``repro.core.shard``): None/1 = single lane, ``"auto"``/0 = one shard
+    per jax device (size the host platform first — see
+    ``repro.launch.bootstrap``).
     """
 
     num_devices: Optional[int] = None
@@ -146,6 +153,7 @@ class FleetSpec:
     candidates: Optional[int] = None
     scoring_backend: str = "auto"
     search_backend: str = "fused"
+    num_shards: Optional[Any] = None  # None | int | "auto" | 0 (= auto)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,6 +272,14 @@ class ExperimentSpec:
     def effective_search_backend(self) -> str:
         return self.search_backend or self.fleet.search_backend
 
+    def effective_num_shards(self) -> int:
+        """Resolved fleet-axis shard count (``fleet.num_shards``: None -> 1,
+        "auto"/0 -> one shard per jax device, capped at the fleet size)."""
+        from repro.core import shard
+
+        return shard.resolve_num_shards(self.fleet.num_shards,
+                                        fleet_size=self.effective_num_devices())
+
     def _scheduler_params(self):
         import inspect
 
@@ -295,7 +311,8 @@ class ExperimentSpec:
         n_sel = self.effective_n_sel()
         cost_model = self.cost.build(
             pool, [float(j.local_epochs) for j in jobs], n_sel,
-            scoring_backend=self.effective_scoring_backend())
+            scoring_backend=self.effective_scoring_backend(),
+            num_shards=self.effective_num_shards())
         # scheduler_kwargs may override the default seed/cost_model wiring
         sched_kwargs = {
             "cost_model": cost_model, "seed": self.scheduler_seed,

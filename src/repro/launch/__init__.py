@@ -1,1 +1,6 @@
-"""Distributed launch layer: meshes, sharding rules, step builders, dry-run."""
+"""Distributed launch layer: meshes, sharding rules, step builders, dry-run.
+
+``repro.launch.bootstrap`` sizes the host platform (XLA_FLAGS device count,
+tcmalloc preload) and must be imported/called BEFORE jax — this package
+``__init__`` therefore stays import-free.
+"""
