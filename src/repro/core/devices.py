@@ -270,3 +270,31 @@ class DevicePool:
 
     def recover(self, device_ids) -> None:
         self.busy_until[np.asarray(device_ids)] = 0.0
+
+    # ---- persistence (crash-consistent service checkpoints) ----
+
+    def state_dict(self) -> dict:
+        """Array state for checkpointing. ``rng`` state is NOT included —
+        PCG64 state holds 128-bit integers that don't fit numpy arrays, so
+        it rides in the manifest's JSON half (``rng.bit_generator.state``)."""
+        return {
+            "a": self.a.copy(),
+            "mu": self.mu.copy(),
+            "data_sizes": self.data_sizes.copy(),
+            "busy_until": self.busy_until.copy(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore array state (shapes must match — re-add job columns via
+        ``add_job`` first when resuming a run with dynamic admission)."""
+        if np.shape(state["data_sizes"]) != self.data_sizes.shape:
+            raise ValueError(
+                f"checkpoint data_sizes {np.shape(state['data_sizes'])} vs "
+                f"pool {self.data_sizes.shape} — re-add jobs before loading")
+        self.a = np.asarray(state["a"], dtype=np.float64).copy()
+        self.mu = np.asarray(state["mu"], dtype=np.float64).copy()
+        self.data_sizes = np.asarray(state["data_sizes"],
+                                     dtype=np.float64).copy()
+        self.busy_until = np.asarray(state["busy_until"],
+                                     dtype=self.time_dtype).copy()
+        self.invalidate()

@@ -18,13 +18,18 @@ the next round of that job is scheduled at the release instant. Devices are
 released individually when THEIR local work ends (a fast device that
 finished uploading can immediately join another job).
 
-Fault tolerance: ``failure_rate`` drops each scheduled device with that
-probability mid-round; dropped devices are excluded from aggregation
-(FedAvg over survivors) and quarantined for ``failure_cooldown`` simulated
-seconds — the engine then proceeds, which is exactly how a production FL
-server must behave. Straggler mitigation: optional ``over_provision`` factor
-schedules extra devices and the round completes when n_sel have finished
-(deadline on the straggler tail).
+Fault tolerance: the ``faults`` axis (``repro.faults.FaultSpec``) injects a
+replayable per-round fault schedule — transient dropouts with escalating
+quarantine (exponential backoff, reset on success), permanent crashes,
+straggler slowdown multipliers, correlated fault-domain outages, and
+corrupted uploads. Dropped devices are excluded from aggregation (FedAvg
+over survivors) and the engine proceeds, which is exactly how a production
+FL server must behave. ``round_deadline`` adds FedCS-style partial
+aggregation: survivors slower than the deadline are cut from the cohort.
+The legacy ``failure_rate``/``failure_cooldown`` kwargs remain as a
+deprecated alias (uniform dropouts, fixed cooldown). Straggler mitigation:
+optional ``over_provision`` factor schedules extra devices and the round
+completes when n_sel have finished (deadline on the straggler tail).
 """
 
 from __future__ import annotations
@@ -40,6 +45,9 @@ from repro.config.base import JobConfig
 from repro.core.cost import CostModel
 from repro.core.devices import DevicePool
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
+from repro.faults import FaultEngine, FaultSpec
+
+_EMPTY_IDS = np.array([], dtype=int)
 
 
 class JobRuntime(Protocol):
@@ -83,6 +91,13 @@ class RoundRecord:
     # for schedulers that don't estimate); cost - est_cost is the realized
     # residual the learned schedulers (BODS GP, DNN) model.
     est_cost: Optional[float] = None
+    # Degraded round: every scheduled device failed (or missed the deadline)
+    # and the engine fell back to aggregating the single fastest reporter.
+    degraded: bool = False
+    # Devices whose uploads were drawn corrupted this round (rejected by a
+    # robust runtime, or oracle-discarded by the engine otherwise).
+    corrupt_ids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.array([], dtype=int))
 
 
 @dataclasses.dataclass
@@ -122,13 +137,20 @@ class MultiJobEngine:
         over_provision: float = 1.0,
         release_horizon: float = 0.0,
         rng: Optional[np.random.Generator] = None,
+        faults: Optional[FaultSpec] = None,
     ):
         """``release_horizon``: the paper's appendix notes BODS/RLDS "consider
         the probability to release the devices in V_o". With horizon h > 0, a
         device freeing within h*time_scale is schedulable NOW; its remaining
         busy time is added to its expected/realized round time (so a nearly-
         free fast device can beat a free slow one). h = 0 is paper-faithful
-        strict availability."""
+        strict availability.
+
+        ``faults``: the fault model (``repro.faults.FaultSpec``, or a live
+        ``FaultEngine``). The legacy ``failure_rate``/``failure_cooldown``
+        kwargs are a deprecated alias: when ``faults`` is None and
+        ``failure_rate > 0`` they map onto a uniform-dropout FaultSpec with
+        a fixed cooldown (``FaultSpec.from_legacy``)."""
         self.jobs = [JobState(config=j) for j in jobs]
         self.pool = pool
         self.cost_model = cost_model
@@ -137,6 +159,12 @@ class MultiJobEngine:
         self.n_sel = n_sel or max(1, int(round(0.1 * pool.num_devices)))
         self.failure_rate = failure_rate
         self.failure_cooldown = failure_cooldown
+        if faults is None and failure_rate > 0.0:
+            faults = FaultSpec.from_legacy(failure_rate, failure_cooldown)
+        if isinstance(faults, FaultSpec):
+            faults = (None if faults.inert
+                      else FaultEngine(faults, pool.num_devices))
+        self.fault_engine: Optional[FaultEngine] = faults
         self.over_provision = over_provision
         # Validate up front: an over-provisioned selection larger than the
         # pool can NEVER be satisfied — the engine would re-enqueue "retry"
@@ -241,11 +269,17 @@ class MultiJobEngine:
                 self._seq += 1
                 return
         plan = self.scheduler.schedule(ctx)
+        fe = self.fault_engine
         # Realized time includes any remaining busy time (release_horizon > 0).
         # Preallocated buffers: valid until this launch returns (nothing
         # below stores a view of them).
         times = self.pool.sample_times_into(
             job, js.config.local_epochs, self._times_buf)
+        if fe is not None:
+            # Straggler slowdown multiplies COMPUTE time, not queueing wait.
+            slow = fe.straggler_multipliers(job, js.round_idx)
+            if slow is not None:
+                times *= slow
         np.subtract(self.pool.busy_until, now, out=self._wait_buf)
         np.maximum(self._wait_buf, 0.0, out=self._wait_buf)
         times += self._wait_buf
@@ -258,25 +292,83 @@ class MultiJobEngine:
             keep = sel_ids[np.argsort(sel_times)[: self.n_sel]]
             dropped_straggler = np.setdiff1d(sel_ids, keep)
         else:
-            keep, dropped_straggler = sel_ids, np.array([], dtype=int)
+            keep, dropped_straggler = sel_ids, _EMPTY_IDS
 
-        # Fault injection: each participating device fails with failure_rate.
-        fail_mask = self.rng.random(len(keep)) < self.failure_rate
+        # Fault injection: replayable keyed draws (transient dropouts,
+        # permanent crashes, correlated domain outages).
+        degraded = False
+        if fe is not None:
+            transient_m, crash_m, domain_m = fe.failure_masks(job, js.round_idx)
+            fail_mask = (transient_m | crash_m | domain_m)[keep]
+        else:
+            fail_mask = np.zeros(len(keep), dtype=bool)
         failed = keep[fail_mask]
         survivors = keep[~fail_mask]
-        if survivors.size == 0:  # pathological: everyone failed; keep one
-            survivors, failed = keep[:1], keep[1:]
+        if survivors.size == 0 and keep.size:
+            # Pathological: everyone failed. Keep the FASTEST reporter (its
+            # partial upload is the best single-device aggregate available)
+            # and mark the round degraded so summary() can surface it.
+            fastest = keep[np.argmin(times[keep])]
+            survivors = np.array([fastest])
+            failed = keep[keep != fastest]
+            degraded = True
+
+        # FedCS-style deadline: partial aggregation over on-time survivors.
+        # Late survivors still finish their local work (their devices stay
+        # busy until their own end time) but are cut from the cohort; they
+        # are NOT failures, so no quarantine strikes.
+        deadline_dropped = _EMPTY_IDS
+        if fe is not None and fe.spec.round_deadline is not None:
+            on_time = survivors[times[survivors] <= fe.spec.round_deadline]
+            if on_time.size == 0:
+                on_time = survivors[[np.argmin(times[survivors])]]
+                degraded = True
+            deadline_dropped = np.setdiff1d(survivors, on_time)
+            survivors = on_time
 
         round_time = float(times[survivors].max())
         t_end = now + round_time
         # Devices are busy until THEIR OWN finish time (then free for other jobs).
         per_dev_busy = self._busy_buf  # only masked entries are read by occupy
         per_dev_busy[sel_ids] = now + times[sel_ids]
-        per_dev_busy[failed] = t_end + self.failure_cooldown  # quarantine
+        if fe is not None:
+            # Transient failures escalate (exponential-backoff quarantine,
+            # reset on success); domain outages park for the outage duration;
+            # crashes are permanent.
+            transient_ids = failed[transient_m[failed]]
+            domain_ids = failed[domain_m[failed] & ~crash_m[failed]]
+            crash_ids = failed[crash_m[failed]]
+            per_dev_busy[transient_ids] = (
+                t_end + fe.quarantine_durations(transient_ids))
+            per_dev_busy[domain_ids] = t_end + fe.spec.domain_outage_duration
+            per_dev_busy[crash_ids] = np.inf
+            fe.record_success(survivors)
+        elif failed.size:
+            per_dev_busy[failed] = t_end + self.failure_cooldown
         busy_mask = self._mask_buf
         busy_mask[:] = False
         busy_mask[sel_ids] = True
         self.pool.occupy(busy_mask, per_dev_busy)
+
+        # Corrupted uploads: a robust runtime injects + rejects them inside
+        # its own aggregation (``handles_corruption``); otherwise the engine
+        # oracle-discards them from the aggregation cohort. Either way they
+        # are excluded from the fairness counts (their update never landed).
+        corrupt_ids = (fe.corrupt_mask(job, js.round_idx, survivors)
+                       if fe is not None else None)
+        if corrupt_ids is not None and corrupt_ids.any():
+            corrupt_ids = survivors[corrupt_ids]
+            counted = np.setdiff1d(survivors, corrupt_ids)
+            if not getattr(self.runtime, "handles_corruption", False):
+                if counted.size == 0:
+                    # Every on-time update is corrupt and nothing can screen
+                    # them: aggregate the fastest anyway (degraded round).
+                    counted = survivors[[np.argmin(times[survivors])]]
+                    degraded = True
+                survivors = counted
+        else:
+            corrupt_ids = _EMPTY_IDS
+            counted = survivors
 
         cm = self.cost_model
         fairness = cm.fairness(self.counts[job], plan)  # paper Formula 5 (absolute, recorded)
@@ -294,8 +386,10 @@ class MultiJobEngine:
             begin(job, survivors, js.round_idx)
 
         self._in_flight[job] = dict(
-            plan=plan, survivors=survivors, failed=failed,
-            dropped=np.concatenate([dropped_straggler, failed]),
+            plan=plan, survivors=survivors, counted=counted, failed=failed,
+            dropped=np.concatenate(
+                [dropped_straggler, failed, deadline_dropped]),
+            corrupt=corrupt_ids, degraded=degraded,
             t_start=now, cost=cost, fairness=fairness, round_time=round_time,
             est_cost=getattr(self.scheduler, "last_estimated_cost", None),
             ctx=ctx,
@@ -309,14 +403,15 @@ class MultiJobEngine:
         js = self.jobs[job]
         f = self._in_flight.pop(job)
         metrics = self.runtime.run_round(job, f["survivors"], js.round_idx)
-        self.counts[job][f["survivors"]] += 1.0  # Formula 16
+        self.counts[job][f["counted"]] += 1.0  # Formula 16
 
         self.records.append(RoundRecord(
             job=job, round_idx=js.round_idx, t_start=f["t_start"], t_end=now,
             round_time=f["round_time"], cost=f["cost"], fairness=f["fairness"],
             loss=metrics["loss"], accuracy=metrics["accuracy"],
             device_ids=f["survivors"], dropped=f["dropped"],
-            est_cost=f["est_cost"]))
+            est_cost=f["est_cost"], degraded=f["degraded"],
+            corrupt_ids=f["corrupt"]))
 
         self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
         js.total_round_time += f["round_time"]
@@ -452,5 +547,111 @@ class MultiJobEngine:
                 makespan=recs[-1].t_end if recs else 0.0,
                 admitted_at=js.admitted_at,
                 retired=js.retired,
+                degraded_rounds=sum(1 for r in recs if r.degraded),
+                corrupt_updates=sum(len(r.corrupt_ids) for r in recs),
             )
         return out
+
+    # ---- crash-consistent persistence (the serve resume path) ----
+    #
+    # The engine's state splits into an ARRAY half (a checkpointable pytree:
+    # fairness counts, in-flight round arrays, fault strikes) and a JSON
+    # half (clock, event heap, per-job lifecycle, RNG states, in-flight
+    # scalars). ``repro.serve.persistence`` stores the former through
+    # ``repro.checkpoint`` and the latter in the manifest's ``extra``.
+
+    def state_arrays(self) -> dict:
+        inflight = {}
+        for j, f in sorted(self._in_flight.items()):
+            ctx = f["ctx"]
+            inflight[str(j)] = dict(
+                plan=f["plan"], survivors=f["survivors"],
+                counted=f["counted"], failed=f["failed"],
+                dropped=f["dropped"], corrupt=f["corrupt"],
+                ctx_available=ctx.available, ctx_counts=ctx.counts,
+                ctx_times=ctx.expected_times)
+        out = {"counts": self.counts, "inflight": inflight}
+        if self.fault_engine is not None:
+            out["faults"] = self.fault_engine.state_dict()
+        return out
+
+    def state_meta(self) -> dict:
+        """JSON-serializable half (scalars, heap, RNG states)."""
+        inflight = {}
+        for j, f in sorted(self._in_flight.items()):
+            ctx = f["ctx"]
+            inflight[str(j)] = dict(
+                t_start=f["t_start"], cost=f["cost"],
+                fairness=f["fairness"], round_time=f["round_time"],
+                est_cost=(None if f["est_cost"] is None
+                          else float(f["est_cost"])),
+                degraded=bool(f["degraded"]),
+                ctx_round_idx=int(ctx.round_idx), ctx_tau=float(ctx.tau),
+                ctx_n_sel=int(ctx.n_sel),
+                ctx_other_costs=float(ctx.other_costs))
+        return dict(
+            clock=self.clock, seq=self._seq,
+            heap=[[float(t), int(s), k, int(j)] for t, s, k, j in self._heap],
+            clamp_warned=sorted(self._clamp_warned),
+            n_sel=self.n_sel, over_provision=self.over_provision,
+            rng=self.rng.bit_generator.state,
+            jobs=[dict(round_idx=js.round_idx, done=js.done,
+                       reached_target_at=js.reached_target_at,
+                       total_round_time=js.total_round_time,
+                       admitted_at=js.admitted_at, retired=js.retired,
+                       retired_at=js.retired_at, launched=js.launched,
+                       parked=js.parked) for js in self.jobs],
+            inflight=inflight)
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        """Restore ``state_arrays``/``state_meta`` (jobs must already be
+        re-added so every per-job row exists)."""
+        self.counts = np.asarray(arrays["counts"], dtype=np.float64).copy()
+        if self.fault_engine is not None and "faults" in arrays:
+            self.fault_engine.load_state_dict(arrays["faults"])
+        self.clock = float(meta["clock"])
+        self._seq = int(meta["seq"])
+        self._heap = [(float(t), int(s), str(k), int(j))
+                      for t, s, k, j in meta["heap"]]
+        heapq.heapify(self._heap)
+        self._clamp_warned = set(meta["clamp_warned"])
+        self.n_sel = int(meta["n_sel"])
+        self.over_provision = float(meta["over_provision"])
+        self.rng.bit_generator.state = meta["rng"]
+        if len(meta["jobs"]) != len(self.jobs):
+            raise ValueError(
+                f"checkpoint has {len(meta['jobs'])} jobs, engine has "
+                f"{len(self.jobs)} — re-add admitted jobs before load_state")
+        for js, jm in zip(self.jobs, meta["jobs"]):
+            js.round_idx = int(jm["round_idx"])
+            js.done = bool(jm["done"])
+            js.reached_target_at = jm["reached_target_at"]
+            js.total_round_time = float(jm["total_round_time"])
+            js.admitted_at = float(jm["admitted_at"])
+            js.retired = bool(jm["retired"])
+            js.retired_at = jm["retired_at"]
+            js.launched = bool(jm["launched"])
+            js.parked = bool(jm["parked"])
+        self._in_flight = {}
+        for key, fa in arrays["inflight"].items():
+            fm = meta["inflight"][key]
+            job = int(key)
+            ctx = SchedulingContext(
+                job=job, round_idx=int(fm["ctx_round_idx"]),
+                tau=float(fm["ctx_tau"]), n_sel=int(fm["ctx_n_sel"]),
+                available=np.asarray(fa["ctx_available"], dtype=bool),
+                counts=np.asarray(fa["ctx_counts"], dtype=np.float64),
+                expected_times=np.asarray(fa["ctx_times"], dtype=np.float64),
+                other_costs=float(fm["ctx_other_costs"]))
+            self._in_flight[job] = dict(
+                plan=np.asarray(fa["plan"], dtype=bool),
+                survivors=np.asarray(fa["survivors"], dtype=int),
+                counted=np.asarray(fa["counted"], dtype=int),
+                failed=np.asarray(fa["failed"], dtype=int),
+                dropped=np.asarray(fa["dropped"], dtype=int),
+                corrupt=np.asarray(fa["corrupt"], dtype=int),
+                degraded=bool(fm["degraded"]),
+                t_start=float(fm["t_start"]), cost=float(fm["cost"]),
+                fairness=float(fm["fairness"]),
+                round_time=float(fm["round_time"]),
+                est_cost=fm["est_cost"], ctx=ctx)

@@ -20,6 +20,7 @@ from typing import Callable, Dict, List
 from repro.experiment.registry import Registry
 from repro.experiment.spec import (ArrivalsSpec, ExperimentSpec, FleetSpec,
                                    JobSpec, PoolSpec)
+from repro.faults import FaultSpec
 
 PRESETS = Registry("preset")
 register_preset = PRESETS.register
@@ -179,15 +180,31 @@ def online_smoke(scheduler: str = "bods", num_devices: int = 60,
 
 
 @register_preset("fault-injection")
-def fault_injection(scheduler: str = "bods", failure_rate: float = 0.2,
-                    failure_cooldown: float = 100.0,
+def fault_injection(scheduler: str = "bods", dropout_rate: float = 0.15,
+                    crash_rate: float = 0.003,
+                    straggler_rate: float = 0.10,
+                    straggler_slowdown: float = 3.0,
+                    num_domains: int = 8,
+                    domain_outage_rate: float = 0.02,
+                    corrupt_rate: float = 0.05,
+                    round_deadline: float = None,
                     over_provision: float = 1.2,
                     num_devices: int = 100, seed: int = 1) -> ExperimentSpec:
-    """Beyond-paper robustness regime: devices drop mid-round with
-    ``failure_rate`` and are quarantined; over-provisioning absorbs the
-    straggler/failure tail."""
+    """Beyond-paper robustness regime, now the full ``faults`` axis
+    (``repro.faults.FaultSpec``): transient dropouts with escalating
+    quarantine, rare permanent crashes, straggler slowdowns, correlated
+    fault-domain outages, and corrupted (NaN) uploads — all from a seeded
+    replayable schedule. Over-provisioning absorbs the straggler/failure
+    tail; an optional FedCS-style ``round_deadline`` adds partial
+    aggregation. The legacy ``failure_rate`` spec field remains a
+    deprecated alias for plain uniform dropouts."""
     spec = quickstart(scheduler=scheduler, num_devices=num_devices, seed=seed)
-    return spec.replace(name=f"fault-injection-{scheduler}",
-                        failure_rate=failure_rate,
-                        failure_cooldown=failure_cooldown,
-                        over_provision=over_provision)
+    return spec.replace(
+        name=f"fault-injection-{scheduler}",
+        over_provision=over_provision,
+        faults=FaultSpec(
+            seed=seed, dropout_rate=dropout_rate, crash_rate=crash_rate,
+            straggler_rate=straggler_rate,
+            straggler_slowdown=straggler_slowdown,
+            num_domains=num_domains, domain_outage_rate=domain_outage_rate,
+            corrupt_rate=corrupt_rate, round_deadline=round_deadline))

@@ -93,9 +93,26 @@ def real_fl_runtime(spec, jobs: List[JobConfig], pool: DevicePool, *,
         # One fused runtime over all jobs: the per-job init seeds match the
         # unfused path (seed=init_seed + job_id) so fused/unfused runs are
         # comparable round-for-round at equal specs.
+        fault_engine = None
+        if train.robust:
+            # The runtime re-draws corrupt masks from the SAME keyed
+            # schedule as the engine — a second FaultEngine over the same
+            # spec replays identically, so no state is shared.
+            fspec = spec.effective_faults()
+            if fspec is not None and not fspec.inert:
+                from repro.faults import FaultEngine
+
+                fault_engine = FaultEngine(fspec, pool.num_devices)
         return FusedMultiRuntime(jobs, datasets, seed=init_seed,
                                  buckets=buckets,
-                                 eval_every=train.eval_every)
+                                 eval_every=train.eval_every,
+                                 robust=train.robust,
+                                 reject_mult=train.reject_mult,
+                                 fault_engine=fault_engine)
+    if train.robust:
+        warnings.warn(
+            "TrainSpec.robust requires the fused runtime; the unfused "
+            "baseline aggregates without fault screening", RuntimeWarning)
     if train.buckets is not None or train.eval_every != 1:
         warnings.warn(
             "TrainSpec.buckets/eval_every only apply to the fused runtime; "

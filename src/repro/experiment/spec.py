@@ -33,6 +33,7 @@ from repro.core.cost import CostModel
 from repro.core.devices import DevicePool
 from repro.core.multijob import MultiJobEngine, RoundRecord
 from repro.experiment.registry import RUNTIMES, SCHEDULERS
+from repro.faults import FaultSpec
 
 STUB_MODEL = "stub"
 
@@ -170,11 +171,19 @@ class TrainSpec:
     ``eval_every`` apply to the fused runtime only (the unfused baseline
     has no buckets and evaluates every round; setting them with
     ``fused=False`` warns).
+
+    ``robust`` turns on robust aggregation inside the fused jitted round:
+    per-device updates that are non-finite or whose delta norm exceeds
+    ``reject_mult`` x the cohort's masked median are rejected (zero FedAvg
+    weight) — and the runtime injects the ``faults`` axis's corrupted
+    uploads itself, so screening is part of the measured round (no oracle).
     """
 
     fused: bool = True
     buckets: Optional[Tuple[int, ...]] = None
     eval_every: int = 1
+    robust: bool = False
+    reject_mult: float = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,9 +253,18 @@ class ExperimentSpec:
     arrivals: Optional[ArrivalsSpec] = None
     non_iid: bool = True            # data distribution (both runtime kinds)
     n_sel: Optional[int] = None     # devices per round; None -> 10% of pool
-    # Engine knobs: faults, stragglers, queueing-aware release horizon.
+    # Fault model (``repro.faults.FaultSpec``): crash/dropout/straggler/
+    # domain/corruption rates, quarantine backoff, round deadline. None with
+    # ``failure_rate > 0`` maps the deprecated alias below onto the axis
+    # (``effective_faults``).
+    faults: Optional[FaultSpec] = None
+    # DEPRECATED alias (uniform transient dropouts, fixed cooldown) — kept
+    # for old spec JSONs; subsumed by the ``faults`` axis, which wins when
+    # both are set.
     failure_rate: float = 0.0
     failure_cooldown: float = 60.0
+    # Engine knobs: straggler over-provisioning cut, queueing-aware release
+    # horizon.
     over_provision: float = 1.0
     release_horizon: float = 0.0
     engine_seed: int = 12345
@@ -271,6 +289,18 @@ class ExperimentSpec:
 
     def effective_search_backend(self) -> str:
         return self.search_backend or self.fleet.search_backend
+
+    def effective_faults(self) -> Optional[FaultSpec]:
+        """The resolved fault model: the ``faults`` axis when set, else the
+        deprecated ``failure_rate``/``failure_cooldown`` alias mapped onto
+        it (fixed-cooldown uniform dropouts), else None."""
+        if self.faults is not None:
+            return self.faults
+        if self.failure_rate > 0.0:
+            return FaultSpec.from_legacy(self.failure_rate,
+                                         self.failure_cooldown,
+                                         seed=self.engine_seed)
+        return None
 
     def effective_num_shards(self) -> int:
         """Resolved fleet-axis shard count (``fleet.num_shards``: None -> 1,
@@ -333,8 +363,7 @@ class ExperimentSpec:
         engine = MultiJobEngine(
             jobs, pool, cost_model, scheduler, runtime,
             n_sel=n_sel,
-            failure_rate=self.failure_rate,
-            failure_cooldown=self.failure_cooldown,
+            faults=self.effective_faults(),
             over_provision=self.over_provision,
             release_horizon=self.release_horizon,
             rng=np.random.default_rng(self.engine_seed))
@@ -370,6 +399,8 @@ class ExperimentSpec:
         d["train"] = TrainSpec(**train)
         if d.get("arrivals") is not None:
             d["arrivals"] = ArrivalsSpec(**d["arrivals"])
+        if d.get("faults") is not None:
+            d["faults"] = FaultSpec(**d["faults"])
         return cls(**d)
 
     @classmethod
@@ -393,15 +424,16 @@ class ExperimentSpec:
         axes (``pool``/``cost``/``fleet``/``train``), merged over the current
         values — so ``spec.replace(train={"eval_every": 2})`` and the CLI's
         ``--set train={...}`` work without rebuilding the whole sub-spec."""
-        for key in ("pool", "cost", "fleet", "train", "arrivals"):
+        _optional = {"arrivals": ArrivalsSpec, "faults": FaultSpec}
+        for key in ("pool", "cost", "fleet", "train", "arrivals", "faults"):
             v = changes.get(key)
             if isinstance(v, dict):
                 v = {k: (tuple(val) if k in self._NESTED_TUPLE_FIELDS
                          and val is not None else val)
                      for k, val in v.items()}
                 cur = getattr(self, key)
-                changes[key] = (dataclasses.replace(cur, **v) if cur is not None
-                                else ArrivalsSpec(**v))  # only arrivals can be None
+                changes[key] = (dataclasses.replace(cur, **v)
+                                if cur is not None else _optional[key](**v))
         return dataclasses.replace(self, **changes)
 
 
@@ -430,6 +462,8 @@ def _record_to_dict(r: RoundRecord) -> dict:
     d = dataclasses.asdict(r)
     d["device_ids"] = np.asarray(r.device_ids).astype(int).tolist()
     d["dropped"] = np.asarray(r.dropped).astype(int).tolist()
+    d["corrupt_ids"] = np.asarray(r.corrupt_ids).astype(int).tolist()
+    d["degraded"] = bool(r.degraded)
     return d
 
 
@@ -437,6 +471,7 @@ def _record_from_dict(d: dict) -> RoundRecord:
     d = dict(d)
     d["device_ids"] = np.asarray(d["device_ids"], dtype=int)
     d["dropped"] = np.asarray(d["dropped"], dtype=int)
+    d["corrupt_ids"] = np.asarray(d.get("corrupt_ids", []), dtype=int)
     return RoundRecord(**d)
 
 

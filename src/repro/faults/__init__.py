@@ -1,0 +1,12 @@
+"""Deterministic, replayable fault injection (the resilience layer).
+
+``FaultSpec`` declares WHAT goes wrong (crash/dropout/straggler/domain/
+corruption rates, quarantine backoff, round deadline); ``FaultEngine``
+realizes it as counter-keyed per-round draws any layer can replay
+independently. See ``repro.faults.spec`` for the taxonomy.
+"""
+
+from repro.faults.engine import FaultEngine
+from repro.faults.spec import CORRUPT_MODES, FaultSpec
+
+__all__ = ["FaultSpec", "FaultEngine", "CORRUPT_MODES"]

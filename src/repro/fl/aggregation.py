@@ -13,10 +13,11 @@ one-device-at-a-time path as the semantics reference.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 from repro.optim.compression import _leaf_topk, topk_compress, topk_decompress
@@ -34,6 +35,113 @@ def fedavg(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
         return jnp.sum(leaf * w.reshape(wshape), axis=0)
 
     return jax.tree_util.tree_map(avg, stacked_params)
+
+
+# ---- robust aggregation (fault screening) ----
+#
+# THE rejection rule — one definition, two implementations (the jitted
+# ``rejection_mask`` the fused round runs, and the numpy
+# ``rejection_mask_host`` reference it is parity-tested against):
+#
+#   participating = weight > 0
+#   finite_i      = every leaf of device i's update is finite
+#   norm_i        = || update_i - global ||_2   (float32, over all leaves)
+#   med           = lower median of norm over participating finite devices
+#   keep_i        = participating_i & finite_i & (norm_i <= mult * med + eps)
+#
+# The masked-median threshold adapts to the cohort's own update scale, so
+# no absolute norm bound needs tuning; ``mult`` (TrainSpec.reject_mult)
+# sets how many times the typical update a device may move before being
+# called corrupted.
+
+_REJECT_EPS = 1e-6
+
+
+def _delta_sq_norms(global_params: PyTree, stacked_params: PyTree,
+                    xp) -> Any:
+    """(n,) squared delta norms in float32, leaf order = tree_flatten."""
+    g_leaves = jax.tree_util.tree_leaves(global_params)
+    s_leaves = jax.tree_util.tree_leaves(stacked_params)
+    sq = None
+    for g, s in zip(g_leaves, s_leaves):
+        d = xp.asarray(s, xp.float32) - xp.asarray(g, xp.float32)[None]
+        n = d.shape[0]
+        part = xp.sum(d.reshape(n, -1) ** 2, axis=1)
+        sq = part if sq is None else sq + part
+    return sq
+
+
+def _all_finite(stacked_params: PyTree, xp) -> Any:
+    fin = None
+    for s in jax.tree_util.tree_leaves(stacked_params):
+        n = s.shape[0]
+        part = xp.all(xp.isfinite(xp.asarray(s, xp.float32)).reshape(n, -1),
+                      axis=1)
+        fin = part if fin is None else fin & part
+    return fin
+
+
+def rejection_mask(global_params: PyTree, stacked_params: PyTree,
+                   weights: jnp.ndarray,
+                   mult: jnp.ndarray) -> jnp.ndarray:
+    """(n,) bool keep mask under THE rejection rule (jit-safe)."""
+    part = weights > 0
+    finite = _all_finite(stacked_params, jnp)
+    sq = _delta_sq_norms(global_params, stacked_params, jnp)
+    norm = jnp.sqrt(sq)
+    valid = part & finite
+    ranked = jnp.sort(jnp.where(valid, norm, jnp.inf))
+    cnt = valid.sum()
+    med = ranked[jnp.maximum(cnt - 1, 0) // 2]  # lower median
+    # NaN norms compare False, but keep the finite guard explicit.
+    return part & finite & (norm <= mult * med + _REJECT_EPS)
+
+
+def rejection_mask_host(global_params: PyTree, stacked_params: PyTree,
+                        weights: np.ndarray,
+                        mult: float) -> np.ndarray:
+    """Numpy reference of ``rejection_mask`` — the parity contract the
+    fused round's in-jit screening is tested against."""
+    weights = np.asarray(weights)
+    part = weights > 0
+    with np.errstate(invalid="ignore", over="ignore"):
+        finite = np.asarray(_all_finite(stacked_params, np))
+        norm = np.sqrt(np.asarray(
+            _delta_sq_norms(global_params, stacked_params, np)))
+    valid = part & finite
+    if not valid.any():
+        return np.zeros_like(part)
+    med = np.sort(norm[valid])[(int(valid.sum()) - 1) // 2]
+    with np.errstate(invalid="ignore"):
+        ok = norm <= float(mult) * med + _REJECT_EPS
+    return part & finite & np.where(np.isnan(norm), False, ok)
+
+
+def robust_fedavg(global_params: PyTree, stacked_params: PyTree,
+                  weights: jnp.ndarray,
+                  mult: jnp.ndarray) -> Tuple[PyTree, jnp.ndarray]:
+    """FedAvg over the lanes that survive the rejection rule.
+
+    Rejected lanes are ZEROED before averaging (a NaN lane with zero
+    weight would still poison ``sum(leaf * w)``), and when every lane is
+    rejected the previous global params are returned unchanged (the round
+    aggregates nothing rather than zeroing the model). Returns
+    ``(new_params, keep_mask)``.
+    """
+    ok = rejection_mask(global_params, stacked_params, weights, mult)
+    okf = ok.astype(jnp.float32)
+
+    def zero_nan(leaf):
+        shape = (-1,) + (1,) * (leaf.ndim - 1)
+        return jnp.where(jnp.broadcast_to(ok.reshape(shape), leaf.shape),
+                         leaf, jnp.zeros((), leaf.dtype))
+
+    cleaned = jax.tree_util.tree_map(zero_nan, stacked_params)
+    avg = fedavg(cleaned, weights * okf)
+    any_kept = (weights * okf).sum() > 0
+    new = jax.tree_util.tree_map(
+        lambda a, g: jnp.where(any_kept, a, g), avg, global_params)
+    return new, ok
 
 
 def fedavg_compressed(global_params: PyTree, stacked_params: PyTree,

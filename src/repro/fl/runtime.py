@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import JobConfig, ModelConfig
-from repro.fl.aggregation import fedavg
+from repro.fl.aggregation import fedavg, robust_fedavg
 from repro.models.cnn_zoo import cnn_apply, cnn_init, cnn_loss_and_accuracy
 
 
@@ -107,13 +107,32 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
 
 # ---- the fused per-round step (one compiled call per (config, bucket)) ----
 
+def _inject_corruption(p, locals_, corrupt, corrupt_mode: str, corrupt_scale):
+    """Overwrite corrupted lanes' uploads: all-NaN params (``"nan"``) or a
+    delta blown up by ``corrupt_scale`` (``"scale"``). ``corrupt``: (B,)."""
+
+    def leaf(g, l):
+        c = jnp.broadcast_to(
+            corrupt.reshape((-1,) + (1,) * (l.ndim - 1)), l.shape)
+        if corrupt_mode == "nan":
+            bad = jnp.full_like(l, jnp.nan)
+        else:
+            bad = g[None] + corrupt_scale.astype(l.dtype) * (l - g[None])
+        return jnp.where(c, bad, l)
+
+    return jax.tree_util.tree_map(leaf, p, locals_)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "epochs", "batch_size", "lr", "do_eval"),
+    static_argnames=("cfg", "epochs", "batch_size", "lr", "do_eval",
+                     "robust", "corrupt_mode"),
     donate_argnums=(0,))
 def _fused_group_round(params, dev_ids, mask, active, x, y, partition, sizes,
-                       eval_x, eval_y, cfg: ModelConfig, epochs: int,
-                       batch_size: int, lr: float, do_eval: bool):
+                       eval_x, eval_y, corrupt, reject_mult, corrupt_scale,
+                       cfg: ModelConfig, epochs: int,
+                       batch_size: int, lr: float, do_eval: bool,
+                       robust: bool, corrupt_mode: str):
     """Gather + local SGD + masked FedAvg + (optional) eval, fused.
 
     ``params``: (J, ...) stacked pytree (donated); ``dev_ids``: (J, B) padded
@@ -122,18 +141,34 @@ def _fused_group_round(params, dev_ids, mask, active, x, y, partition, sizes,
     ``x``/``y``: (J, N, ...) device-resident datasets; ``partition``:
     (J, K, W) index matrices; ``sizes``: (J, K) real per-device partition
     sizes (the FedAvg weights); ``eval_x``/``eval_y``: (J, E, ...) held-out
-    sets. Returns (new_params, loss (J,), acc (J,)) — loss/acc are NaN when
-    ``do_eval`` is False (the branch is skipped entirely, not masked).
+    sets. Returns (new_params, loss (J,), acc (J,), rejected (J,)) —
+    loss/acc are NaN when ``do_eval`` is False (the branch is skipped
+    entirely, not masked).
+
+    ``robust`` (static) turns on in-jit fault screening: ``corrupt`` (J, B)
+    lanes upload injected garbage (``corrupt_mode``/``corrupt_scale`` — the
+    faults axis's corrupted-update model), then aggregation rejects
+    non-finite and norm-outlier updates against a ``reject_mult`` x
+    masked-median threshold (``repro.fl.aggregation.robust_fedavg``).
+    ``rejected`` counts screened-out participating lanes per job (0 when
+    ``robust`` is False — the plain path is compiled unchanged).
     """
 
-    def one(p, ids, m, xj, yj, pj, sj):
+    def one(p, ids, m, cj, xj, yj, pj, sj):
         idx = pj[ids]                                    # (B, W) in-jit gather
         dev_x, dev_y = xj[idx], yj[idx]                  # (B, W, ...)
         locals_ = jax.vmap(
             _local_train_one,
             in_axes=(None, None, 0, 0, None, None, None))(
                 p, cfg, dev_x, dev_y, epochs, batch_size, lr)
-        return fedavg(locals_, m * sj[ids])              # masked real sizes
+        w = m * sj[ids]                                  # masked real sizes
+        if not robust:
+            return fedavg(locals_, w), jnp.zeros((), jnp.float32)
+        locals_ = _inject_corruption(p, locals_, cj > 0, corrupt_mode,
+                                     corrupt_scale)
+        agg, ok = robust_fedavg(p, locals_, w, reject_mult)
+        rej = jnp.sum((m > 0) & ~ok).astype(jnp.float32)
+        return agg, rej
 
     J = active.shape[0]
     if J == 1:
@@ -143,10 +178,12 @@ def _fused_group_round(params, dev_ids, mask, active, x, y, partition, sizes,
         # keeps single-job groups BITWISE equal to the unfused baseline.
         lane0 = lambda tree: jax.tree_util.tree_map(lambda l: l[0], tree)
         relane = lambda tree: jax.tree_util.tree_map(lambda l: l[None], tree)
-        new = relane(one(lane0(params), dev_ids[0], mask[0], x[0], y[0],
-                         partition[0], sizes[0]))
+        new, rej = one(lane0(params), dev_ids[0], mask[0], corrupt[0], x[0],
+                       y[0], partition[0], sizes[0])
+        new, rejected = relane(new), rej[None]
     else:
-        new = jax.vmap(one)(params, dev_ids, mask, x, y, partition, sizes)
+        new, rejected = jax.vmap(one)(params, dev_ids, mask, corrupt, x, y,
+                                      partition, sizes)
     keep = lambda nl, ol: jnp.where(
         active.reshape((-1,) + (1,) * (nl.ndim - 1)), nl, ol)
     new = jax.tree_util.tree_map(keep, new, params)
@@ -163,7 +200,7 @@ def _fused_group_round(params, dev_ids, mask, active, x, y, partition, sizes,
     else:
         loss = jnp.full(active.shape, jnp.nan, jnp.float32)
         acc = jnp.full(active.shape, jnp.nan, jnp.float32)
-    return new, loss, acc
+    return new, loss, acc, rejected
 
 
 @dataclasses.dataclass
@@ -202,16 +239,31 @@ class FusedMultiRuntime:
     evaluated metrics (stale by < k rounds — target detection lags
     accordingly). A flush evaluates the whole group if ANY flushed lane is
     due (fresh metrics are used for every lane in that case).
+
+    ``robust`` turns on in-jit fault screening (``TrainSpec.robust``):
+    the runtime takes over corrupted-upload handling from the engine
+    (``handles_corruption``) — it re-draws each round's corrupt mask from
+    ``fault_engine`` (the replayable keyed schedule, so engine and runtime
+    agree with zero plumbing), injects the garbage uploads itself, and
+    rejects non-finite/outlier updates inside the fused round at a
+    ``reject_mult`` x masked-median norm threshold. Per-round rejection
+    counts ride on the metrics dict (``"rejected"``) and accumulate in
+    ``rejected_total``.
     """
 
     def __init__(self, jobs: Sequence[JobConfig], datasets: Sequence[tuple],
                  seed: int = 0, buckets: Optional[Sequence[int]] = None,
-                 eval_every: int = 1):
+                 eval_every: int = 1, robust: bool = False,
+                 reject_mult: float = 4.0, fault_engine=None):
         if len(jobs) != len(datasets):
             raise ValueError("one dataset tuple per job required")
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {eval_every}")
         self.eval_every = int(eval_every)
+        self.robust = bool(robust)
+        self.reject_mult = float(reject_mult)
+        self.fault_engine = fault_engine
+        self.rejected_total = 0.0
         self._queued: Dict[int, tuple] = {}      # job -> (ids, round_idx)
         self._results: Dict[tuple, dict] = {}    # (job, round) -> metrics
         self._last: Dict[int, dict] = {}         # job -> last evaluated
@@ -263,6 +315,12 @@ class FusedMultiRuntime:
 
     # ---- engine protocol ----
 
+    @property
+    def handles_corruption(self) -> bool:
+        """Robust mode screens corrupted uploads inside aggregation, so the
+        engine must NOT oracle-discard them from the cohort."""
+        return self.robust
+
     def begin_round(self, job_id: int, device_ids: np.ndarray,
                     round_idx: int) -> None:
         """Announce a launched round's REALIZED cohort (post drop/failure).
@@ -281,7 +339,7 @@ class FusedMultiRuntime:
                 # demanded cohort wins (nothing has been computed yet).
                 self.begin_round(job_id, ids, round_idx)
             self._flush()
-        rec, trained_ids = self._results.pop(key)
+        rec, trained_ids, rej = self._results.pop(key)
         if not np.array_equal(trained_ids, ids):
             raise ValueError(
                 f"job {job_id} round {round_idx} was trained on the cohort "
@@ -291,7 +349,11 @@ class FusedMultiRuntime:
         # group asynchronously, so other jobs' rounds keep computing while
         # this one's metrics transfer and the engine does its bookkeeping.
         _, loss, acc, ln = rec
-        return {"loss": float(loss[ln]), "accuracy": float(acc[ln])}
+        out = {"loss": float(loss[ln]), "accuracy": float(acc[ln])}
+        if self.robust:
+            out["rejected"] = float(rej[ln])
+            self.rejected_total += out["rejected"]
+        return out
 
     # ---- execution ----
 
@@ -306,19 +368,32 @@ class FusedMultiRuntime:
             B = bucket_for(max(len(ids) for _, ids, _ in pend), self.buckets)
             dev_ids = np.zeros((J, B), np.int32)
             mask = np.zeros((J, B), np.float32)
+            corrupt = np.zeros((J, B), np.float32)
             active = np.zeros((J,), bool)
             do_eval = any(r % self.eval_every == 0 or jid not in self._last
                           for jid, _, r in pend)
-            for jid, ids, _ in pend:
+            for jid, ids, r in pend:
                 ln = grp.lane[jid]
                 dev_ids[ln, : len(ids)] = ids
                 mask[ln, : len(ids)] = 1.0
                 active[ln] = True
-            grp.params, loss, acc = _fused_group_round(
+                if self.robust and self.fault_engine is not None:
+                    # The SAME keyed draw the engine made for this round.
+                    corrupt[ln, : len(ids)] = self.fault_engine.corrupt_mask(
+                        jid, r, ids)
+            fspec = getattr(self.fault_engine, "spec", None)
+            grp.params, loss, acc, rej = _fused_group_round(
                 grp.params, jnp.asarray(dev_ids), jnp.asarray(mask),
                 jnp.asarray(active), grp.x, grp.y, grp.partition, grp.sizes,
-                grp.eval_x, grp.eval_y, cfg=grp.cfg, epochs=grp.epochs,
-                batch_size=grp.batch_size, lr=grp.lr, do_eval=do_eval)
+                grp.eval_x, grp.eval_y, jnp.asarray(corrupt),
+                jnp.float32(self.reject_mult),
+                jnp.float32(fspec.corrupt_scale if fspec is not None
+                            else 1.0),
+                cfg=grp.cfg, epochs=grp.epochs,
+                batch_size=grp.batch_size, lr=grp.lr, do_eval=do_eval,
+                robust=self.robust,
+                corrupt_mode=(fspec.corrupt_mode if fspec is not None
+                              else "nan"))
             for jid, ids, r in pend:
                 ln = grp.lane[jid]
                 if do_eval:
@@ -329,7 +404,7 @@ class FusedMultiRuntime:
                     rec = self._last[jid]  # immutable snapshot (stale by < k)
                 # The trained cohort rides along so a demand with a DIFFERENT
                 # cohort fails loudly instead of mis-attributing metrics.
-                self._results[(jid, r)] = (rec, ids)
+                self._results[(jid, r)] = (rec, ids, rej)
 
     # ---- introspection (tests / checkpointing) ----
 
@@ -471,6 +546,27 @@ class SyntheticRuntime:
                     b = np.full(len(self.seen), float(b))
                 b[job_id] = float(b0)
                 self.b0 = b
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Array state for crash-consistent checkpointing (rng state rides
+        separately in the manifest's JSON half)."""
+        return {
+            "seen": np.stack(self.seen) if self.seen
+            else np.zeros((0, self.num_classes)),
+            "rounds": self.rounds.copy(),
+            "b0": np.asarray(self.b0, dtype=np.float64),
+        }
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        seen = np.asarray(state["seen"], dtype=np.float64)
+        if seen.shape[0] != len(self.seen):
+            raise ValueError(
+                f"checkpoint has {seen.shape[0]} jobs, runtime has "
+                f"{len(self.seen)} — re-add jobs before loading")
+        self.seen = [seen[i].copy() for i in range(seen.shape[0])]
+        self.rounds = np.asarray(state["rounds"], dtype=np.int64).copy()
+        b0 = np.asarray(state["b0"], dtype=np.float64)
+        self.b0 = float(b0) if b0.ndim == 0 else b0.copy()
 
     def run_round(self, job_id: int, device_ids: np.ndarray, round_idx: int):
         hit = self.device_classes[np.asarray(device_ids)].ravel()

@@ -96,6 +96,13 @@ class Scenario(NamedTuple):
     # start=0 / end=inf for every job.
     job_start: jax.Array       # (M,)
     job_end: jax.Array         # (M,)
+    # Rich fault axes (inert at the zero defaults): per-round straggler
+    # slowdowns and correlated fault-domain outages, mirroring the live
+    # engine's ``repro.faults`` schedule.
+    straggler_rate: jax.Array      # () per-device slowdown probability
+    straggler_slowdown: jax.Array  # () compute-time multiplier
+    domain: jax.Array              # (K,) int32 fault-domain assignment
+    domain_rate: jax.Array         # () per-round whole-domain outage prob
 
 
 class EnvState(NamedTuple):
@@ -149,10 +156,13 @@ def calibrate_scales(cfg: EnvConfig, exp_base: jax.Array):
 
 def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
                   time_scale=None, fairness_scale=None,
-                  job_start=None, job_end=None) -> Scenario:
+                  job_start=None, job_end=None,
+                  straggler_rate=0.0, straggler_slowdown=3.0,
+                  domain=None, domain_rate=0.0) -> Scenario:
     """Materialize the derived per-job arrays (SoA fast path) and calibrate
     the cost normalizers (unless given, e.g. from a live CostModel — then
-    ``cfg`` may be None)."""
+    ``cfg`` may be None). The fault axes default to inert (no stragglers,
+    no fault domains) so legacy callers are untouched."""
     f32 = jnp.float32
     a = jnp.asarray(a, f32)
     mu = jnp.asarray(mu, f32)
@@ -165,10 +175,13 @@ def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
     if time_scale is None or fairness_scale is None:
         time_scale, fairness_scale = calibrate_scales(cfg, exp_base)
     M = d_t.shape[0]
+    K = d_t.shape[1]
     if job_start is None:
         job_start = jnp.zeros((M,), f32)
     if job_end is None:
         job_end = jnp.full((M,), jnp.inf, f32)
+    if domain is None:
+        domain = jnp.zeros((K,), jnp.int32)
     return Scenario(
         a=a, mu=mu, data=data, taus=taus,
         failure_rate=jnp.asarray(failure_rate, f32),
@@ -178,7 +191,11 @@ def make_scenario(cfg: Optional[EnvConfig], a, mu, data, taus, failure_rate,
         a_norm=a / jnp.max(a), mu_norm=mu / jnp.max(mu),
         data_norm=data / jnp.max(data),
         job_start=jnp.asarray(job_start, f32),
-        job_end=jnp.asarray(job_end, f32))
+        job_end=jnp.asarray(job_end, f32),
+        straggler_rate=jnp.asarray(straggler_rate, f32),
+        straggler_slowdown=jnp.asarray(straggler_slowdown, f32),
+        domain=jnp.asarray(domain, jnp.int32),
+        domain_rate=jnp.asarray(domain_rate, f32))
 
 
 def _zero_dynamics(cfg: EnvConfig, scen: Scenario, key: jax.Array) -> EnvState:
@@ -197,10 +214,12 @@ def _zero_dynamics(cfg: EnvConfig, scen: Scenario, key: jax.Array) -> EnvState:
 def reset(cfg: EnvConfig, scen_spec: ScenarioSpec, key: jax.Array) -> EnvState:
     """Draw a fresh randomized scenario and zero the dynamic state."""
     k_scen, k_env = jax.random.split(key)
-    a, mu, data, taus, failure_rate, job_start, job_end = sample_scenario(
-        k_scen, scen_spec, cfg.num_devices, cfg.num_jobs)
-    scen = make_scenario(cfg, a, mu, data, taus, failure_rate,
-                         job_start=job_start, job_end=job_end)
+    d = sample_scenario(k_scen, scen_spec, cfg.num_devices, cfg.num_jobs)
+    scen = make_scenario(cfg, d.a, d.mu, d.data, d.taus, d.failure_rate,
+                         job_start=d.job_start, job_end=d.job_end,
+                         straggler_rate=d.straggler_rate,
+                         straggler_slowdown=scen_spec.straggler_slowdown,
+                         domain=d.domain, domain_rate=d.domain_rate)
     return _zero_dynamics(cfg, scen, k_env)
 
 
@@ -266,7 +285,9 @@ def job_active(state: EnvState) -> jax.Array:
 
 
 def _apply_round(cfg: EnvConfig, state: EnvState, plan: jax.Array,
-                 exp_noise: jax.Array, fail_u: jax.Array
+                 exp_noise: jax.Array, fail_u: jax.Array,
+                 straggler_u: Optional[jax.Array] = None,
+                 domain_u: Optional[jax.Array] = None
                  ) -> Tuple[EnvState, StepOut]:
     """Deterministic round transition given the stochastic draws.
 
@@ -275,6 +296,12 @@ def _apply_round(cfg: EnvConfig, state: EnvState, plan: jax.Array,
     so rollouts can pre-draw whole trajectories in bulk and so the
     engine-parity test can inject the exact draws the live
     ``DevicePool``/engine consumed.
+
+    The rich-fault draws are optional (None compiles them away entirely):
+    ``straggler_u`` (K,) uniforms gating the per-device slowdown
+    multiplier; ``domain_u`` (K,) uniforms read PER FAULT DOMAIN —
+    ``domain_u[scen.domain]`` correlates the outage coin-flip across every
+    device in a domain, mirroring ``repro.faults.FaultEngine``.
     """
     scen = state.scen
     job = state.job
@@ -283,9 +310,16 @@ def _apply_round(cfg: EnvConfig, state: EnvState, plan: jax.Array,
     # Formula 4 realized times from the precomputed per-job shift/scale
     # (selected devices are available => no wait term).
     times = scen.shift[job] + exp_noise * scen.scale[job]
+    if straggler_u is not None:
+        times = times * jnp.where(straggler_u < scen.straggler_rate,
+                                  scen.straggler_slowdown, 1.0)
 
     sel = plan
     fail = sel & (fail_u < scen.failure_rate)
+    if domain_u is not None:
+        # One uniform per domain, indexed per device: the whole domain
+        # shares a coin-flip, so outages are correlated.
+        fail = fail | (sel & (domain_u[scen.domain] < scen.domain_rate))
     survivors = sel & ~fail
     # Engine guard: if every selected device failed, keep the first one.
     first_sel = jax.nn.one_hot(jnp.argmax(sel), cfg.num_devices,
@@ -329,10 +363,15 @@ def step(cfg: EnvConfig, state: EnvState, plan: jax.Array
          ) -> Tuple[EnvState, StepOut]:
     """One scheduling round of the round-robin job under ``plan`` ((K,)
     bool, exactly n_sel available devices)."""
-    key, k_t, k_f = jax.random.split(state.key, 3)
+    key, k_t, k_f, k_s, k_d = jax.random.split(state.key, 5)
     exp_noise = jax.random.exponential(k_t, (cfg.num_devices,))
     fail_u = jax.random.uniform(k_f, (cfg.num_devices,))
-    return _apply_round(cfg, state._replace(key=key), plan, exp_noise, fail_u)
+    # (K,) uniforms cover any domain count <= K; domain_u[scen.domain]
+    # reads one shared coin-flip per fault domain.
+    straggler_u = jax.random.uniform(k_s, (cfg.num_devices,))
+    domain_u = jax.random.uniform(k_d, (cfg.num_devices,))
+    return _apply_round(cfg, state._replace(key=key), plan, exp_noise,
+                        fail_u, straggler_u, domain_u)
 
 
 # ---- policy plumbing (mirrors RLDSScheduler) -----------------------------
@@ -410,26 +449,29 @@ def policy_rollout(cfg: EnvConfig, params, state: EnvState, num_steps: int,
     from repro.core.schedulers.rlds import _policy_logits
 
     K = cfg.num_devices
-    key, k_e, k_f, k_g = jax.random.split(state.key, 4)
+    key, k_e, k_f, k_g, k_s, k_d = jax.random.split(state.key, 6)
     state = state._replace(key=key)
     exp_noise = jax.random.exponential(k_e, (num_steps, K))
     fail_u = jax.random.uniform(k_f, (num_steps, K))
     gumbel = (jnp.zeros((num_steps, K)) if deterministic
               else jax.random.gumbel(k_g, (num_steps, K)))
+    straggler_u = jax.random.uniform(k_s, (num_steps, K))
+    domain_u = jax.random.uniform(k_d, (num_steps, K))
 
     def one(st, xs):
-        noise, fu, g = xs
+        noise, fu, g, su, du = xs
         now = release_instant(cfg, st)
         feats, available = device_features(cfg, st, now)
         logits = _policy_logits(params, feats)
         plan = plan_from_gumbel(logits, g, available, cfg.n_sel)
         plan = plan & job_active(st)
-        st, out = _apply_round(cfg, st, plan, noise, fu)
+        st, out = _apply_round(cfg, st, plan, noise, fu, su, du)
         return st, Transition(feats=feats, plan=plan, available=available,
                               reward=out.reward, cost=out.cost,
                               round_time=out.round_time, job=out.job)
 
-    return jax.lax.scan(one, state, (exp_noise, fail_u, gumbel))
+    return jax.lax.scan(one, state,
+                        (exp_noise, fail_u, gumbel, straggler_u, domain_u))
 
 
 def batch_rollout(cfg: EnvConfig, params, states: EnvState, num_steps: int,
@@ -448,19 +490,21 @@ def random_rollout(cfg: EnvConfig, state: EnvState, num_steps: int
     workload and the random-scheduler baseline. Identical environment
     machinery to ``policy_rollout`` minus the policy network."""
     K = cfg.num_devices
-    key, k_e, k_f, k_g = jax.random.split(state.key, 4)
+    key, k_e, k_f, k_g, k_s, k_d = jax.random.split(state.key, 6)
     state = state._replace(key=key)
     noise = (jax.random.exponential(k_e, (num_steps, K)),
              jax.random.uniform(k_f, (num_steps, K)),
-             jax.random.gumbel(k_g, (num_steps, K)))
+             jax.random.gumbel(k_g, (num_steps, K)),
+             jax.random.uniform(k_s, (num_steps, K)),
+             jax.random.uniform(k_d, (num_steps, K)))
 
     def one(st, xs):
-        e, fu, g = xs
+        e, fu, g, su, du = xs
         now = release_instant(cfg, st)
         available = available_mask(st, now)
         plan = plan_from_gumbel(jnp.zeros(K), g, available, cfg.n_sel)
         plan = plan & job_active(st)
-        return _apply_round(cfg, st, plan, e, fu)
+        return _apply_round(cfg, st, plan, e, fu, su, du)
 
     return jax.lax.scan(one, state, noise)
 

@@ -20,7 +20,7 @@ complexity, and the all-of-the-above "full" curriculum.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,15 @@ class ScenarioSpec:
     # zero-gradient no-op round.
     arrival_window: Tuple[float, float] = (0.0, 0.0)
     lifetime: Tuple[float, float] = (0.0, 0.0)
+    # Fault axes beyond uniform dropouts (mirroring repro.faults.FaultSpec):
+    # per-episode straggler rate (devices whose compute time is multiplied
+    # by ``straggler_slowdown``) and correlated fault domains — devices are
+    # scattered over ``num_domains`` groups and a whole group drops together
+    # with per-round probability drawn from ``domain_outage_range``.
+    straggler_range: Tuple[float, float] = (0.0, 0.0)
+    straggler_slowdown: float = 3.0
+    num_domains: int = 0
+    domain_outage_range: Tuple[float, float] = (0.0, 0.0)
 
 
 CURRICULA: Dict[str, ScenarioSpec] = {
@@ -72,14 +81,36 @@ CURRICULA: Dict[str, ScenarioSpec] = {
     # fairness-count and occupancy shifts of a changing job mix.
     "arrivals": ScenarioSpec(arrival_window=(0.0, 24.0),
                              lifetime=(8.0, 48.0)),
+    # Rich fault regime matching the engine's faults axis: uniform dropouts
+    # PLUS stragglers and correlated fault-domain outages — policies must
+    # learn that a slow or outage-prone cohort is a cost, not just a risk.
+    "faults": ScenarioSpec(failure_range=(0.0, 0.2),
+                           straggler_range=(0.0, 0.3),
+                           num_domains=8,
+                           domain_outage_range=(0.0, 0.05)),
 }
 
 
+class ScenarioDraw(NamedTuple):
+    """One concrete scenario (the output of ``sample_scenario``)."""
+
+    a: jax.Array
+    mu: jax.Array
+    data: jax.Array
+    taus: jax.Array
+    failure_rate: jax.Array
+    job_start: jax.Array
+    job_end: jax.Array
+    straggler_rate: jax.Array   # ()
+    domain: jax.Array           # (K,) int32 fault-domain assignment
+    domain_rate: jax.Array      # () per-round whole-domain outage prob
+
+
 def sample_scenario(key: jax.Array, scen: ScenarioSpec, num_devices: int,
-                    num_jobs: int):
-    """Draw one scenario: (a, mu, data, taus, failure_rate, job_start,
-    job_end) as jnp arrays."""
-    k_spread, k_a, k_mu, k_d, k_tau, k_f, k_s, k_l = jax.random.split(key, 8)
+                    num_jobs: int) -> ScenarioDraw:
+    """Draw one scenario as a ``ScenarioDraw`` of jnp arrays."""
+    (k_spread, k_a, k_mu, k_d, k_tau, k_f, k_s, k_l, k_str,
+     k_dom, k_dr) = jax.random.split(key, 11)
     spread = jax.random.uniform(
         k_spread, (), minval=scen.hetero_decades[0],
         maxval=scen.hetero_decades[1])
@@ -110,6 +141,20 @@ def sample_scenario(key: jax.Array, scen: ScenarioSpec, num_devices: int,
         life = jax.random.uniform(k_l, (num_jobs,), minval=scen.lifetime[0],
                                   maxval=scen.lifetime[1])
         job_end = (job_start + life).astype(jnp.float32).at[0].set(jnp.inf)
-    return (a.astype(jnp.float32), mu.astype(jnp.float32),
-            data.astype(jnp.float32), taus, failure_rate.astype(jnp.float32),
-            job_start, job_end)
+    straggler_rate = jax.random.uniform(
+        k_str, (), minval=scen.straggler_range[0],
+        maxval=scen.straggler_range[1])
+    if scen.num_domains > 0:
+        domain = jax.random.randint(k_dom, (num_devices,), 0,
+                                    scen.num_domains)
+        domain_rate = jax.random.uniform(
+            k_dr, (), minval=scen.domain_outage_range[0],
+            maxval=scen.domain_outage_range[1])
+    else:
+        domain = jnp.zeros((num_devices,), jnp.int32)
+        domain_rate = jnp.zeros((), jnp.float32)
+    return ScenarioDraw(
+        a.astype(jnp.float32), mu.astype(jnp.float32),
+        data.astype(jnp.float32), taus, failure_rate.astype(jnp.float32),
+        job_start, job_end, straggler_rate.astype(jnp.float32),
+        domain.astype(jnp.int32), domain_rate.astype(jnp.float32))

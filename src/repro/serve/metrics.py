@@ -120,6 +120,32 @@ class ServiceMetrics:
     def sample_queue_depth(self, depth: int) -> None:
         self.queue_depth_samples.append(int(depth))
 
+    # ---- persistence (crash-consistent service resume) ----
+
+    _COUNTERS = ("events_processed", "arrivals", "departures", "readmissions",
+                 "rejections", "churn_events", "rounds_completed", "decisions")
+
+    def to_state(self) -> dict:
+        """Full mutable state as a JSON-serializable dict (raw latency and
+        queue-depth samples included, so a resumed run's report percentiles
+        match an uninterrupted one's — modulo wall-clock latency noise)."""
+        return {
+            **{k: getattr(self, k) for k in self._COUNTERS},
+            "latency_samples": list(self.decision_latency.samples),
+            "queue_depth_samples": list(self.queue_depth_samples),
+            "tenants": [dataclasses.asdict(t) for t in self.tenants.values()],
+        }
+
+    def load_state(self, state: dict) -> None:
+        for k in self._COUNTERS:
+            setattr(self, k, int(state[k]))
+        self.decision_latency = LatencyStats(
+            samples=[float(s) for s in state["latency_samples"]])
+        self.queue_depth_samples = [int(s)
+                                    for s in state["queue_depth_samples"]]
+        self.tenants = {d["tenant"]: TenantStats(**d)
+                        for d in state["tenants"]}
+
     def report(self, sim_horizon: float, wall_s: float) -> "ServiceReport":
         rounds = np.asarray(
             [t.rounds for t in self.tenants.values()], dtype=np.float64)

@@ -47,10 +47,25 @@ from repro.serve.traffic import TrafficEvent, trace_from_spec
 RESCORE_MODES = ("incremental", "full")
 
 
+class SimulatedCrash(RuntimeError):
+    """In-process stand-in for ``kill -9`` (the ``crash_after`` test hook):
+    raised AFTER the Nth traffic event is applied, past any checkpoint for
+    that boundary — state on disk is whatever the last atomic save
+    committed, exactly like a hard kill."""
+
+
 class SchedulerService:
     def __init__(self, spec: ExperimentSpec,
                  rescore_mode: str = "incremental",
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 crash_after: Optional[int] = None):
+        """``checkpoint_dir``/``checkpoint_every``: atomically persist the
+        FULL service state every N traffic events (``repro.serve.
+        persistence``); ``resume()`` restarts bit-identically from the
+        newest committed step. ``crash_after``: raise ``SimulatedCrash``
+        after the Nth event (chaos tests)."""
         if spec.arrivals is None:
             raise ValueError("SchedulerService needs spec.arrivals "
                              "(the online traffic axis)")
@@ -60,6 +75,16 @@ class SchedulerService:
         self.spec = spec
         self.rescore_mode = rescore_mode
         self.verbose = verbose
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_dir = checkpoint_dir
+        self._ckpt_manager = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+
+            self._ckpt_manager = CheckpointManager(checkpoint_dir)
+        self.crash_after = crash_after
+        self.trace: Optional[List[TrafficEvent]] = None
+        self._next_event = 0   # resume cursor: traffic events already applied
 
         self.engine: MultiJobEngine = spec.build().engine
         eng = self.engine
@@ -91,6 +116,26 @@ class SchedulerService:
         self._cold = (self._make_cold_scheduler()
                       if rescore_mode == "full" else None)
         self.last_report: Optional[ServiceReport] = None
+
+    # ---- crash-consistent persistence ----
+
+    @classmethod
+    def resume(cls, checkpoint_dir: str, verbose: bool = False,
+               crash_after: Optional[int] = None) -> "SchedulerService":
+        """Rebuild a service from the newest committed checkpoint and
+        position it at the saved event boundary; a subsequent ``run()``
+        continues the SAME trajectory bit-for-bit."""
+        from repro.serve.persistence import (read_manifest_extra,
+                                             restore_service)
+
+        extra = read_manifest_extra(checkpoint_dir)
+        svc = cls(ExperimentSpec.from_dict(extra["spec"]),
+                  rescore_mode=extra["rescore_mode"], verbose=verbose,
+                  checkpoint_dir=checkpoint_dir,
+                  checkpoint_every=int(extra["checkpoint_every"]),
+                  crash_after=crash_after)
+        restore_service(svc, checkpoint_dir)
+        return svc
 
     # ---- construction helpers ----
 
@@ -279,15 +324,28 @@ class SchedulerService:
         arr = self.spec.arrivals
         eng = self.engine
         if trace is None:
-            trace = trace_from_spec(arr, len(self.templates),
-                                    eng.pool.num_devices)
+            # A resumed service replays ITS OWN saved trace (regenerating
+            # would fork the trajectory if the spec's seed axis changed).
+            trace = self.trace if self.trace is not None else trace_from_spec(
+                arr, len(self.templates), eng.pool.num_devices)
         self.trace = trace
         t0 = time.perf_counter()
-        for ev in trace:
+        for i in range(self._next_event, len(trace)):
+            ev = trace[i]
             eng.advance_until(ev.t, on_round=self._on_round)
             self._handle(ev)
             self.metrics.events_processed += 1
             self.metrics.sample_queue_depth(len(self._queue))
+            self._next_event = i + 1
+            if (self._ckpt_manager is not None and self.checkpoint_every > 0
+                    and self._next_event % self.checkpoint_every == 0):
+                from repro.serve.persistence import save_service_checkpoint
+
+                save_service_checkpoint(self, self._next_event)
+            if self.crash_after is not None and self._next_event >= self.crash_after:
+                raise SimulatedCrash(
+                    f"crash_after={self.crash_after}: simulated hard kill "
+                    f"after event {self._next_event}")
         # Drain: live jobs run to completion; finishing jobs release slots,
         # which admits queued tenants mid-drain (on_job_done fires inside
         # advance_until, so late admissions still execute).

@@ -182,10 +182,13 @@ def test_presets_exist_and_build():
     assert [j.name for j in spec.jobs] == ["vgg16", "cnn-a", "lenet5"]
     assert spec.jobs[0].convergence_rate is not None
     fault = get_preset("fault-injection", scheduler="random")
-    assert fault.failure_rate > 0
-    # fault preset really drops devices
+    assert fault.faults is not None and not fault.faults.inert
+    assert fault.effective_faults().dropout_rate > 0
+    # fault preset really drops devices, and the run stays finite
     res = fault.replace(jobs=tuple(j for j in tiny_spec().jobs)).run()
     assert sum(len(r.dropped) for r in res.records) > 0
+    assert all(np.isfinite(r.accuracy) and np.isfinite(r.loss)
+               for r in res.records)
 
 
 def test_cli_run_and_list(tmp_path, capsys):

@@ -309,7 +309,8 @@ def test_arrivals_curriculum_draws_job_windows():
 
     spec = CURRICULA["arrivals"]
     key = jax.random.PRNGKey(0)
-    a, mu, data, taus, fr, start, end = sample_scenario(key, spec, 24, 4)
+    draw = sample_scenario(key, spec, 24, 4)
+    start, end = draw.job_start, draw.job_end
     assert start.shape == (4,) and end.shape == (4,)
     # job 0 anchors the episode: live from step 0, never departs
     assert float(start[0]) == 0.0 and not bool(jnp.isfinite(end[0]))
@@ -317,10 +318,9 @@ def test_arrivals_curriculum_draws_job_windows():
     assert bool(((start[1:] >= lo) & (start[1:] <= hi)).all())
     assert bool((end[1:] > start[1:]).all())
     # the closed-set default compiles the windows away
-    a2, mu2, d2, t2, f2, s2, e2 = sample_scenario(
-        key, CURRICULA["default"], 24, 4)
-    assert float(jnp.abs(s2).sum()) == 0.0
-    assert not bool(jnp.isfinite(e2).any())
+    d2 = sample_scenario(key, CURRICULA["default"], 24, 4)
+    assert float(jnp.abs(d2.job_start).sum()) == 0.0
+    assert not bool(jnp.isfinite(d2.job_end).any())
 
 
 def test_inactive_job_round_is_noop():
