@@ -46,6 +46,7 @@ from repro.core.cost import CostModel
 from repro.core.devices import DevicePool
 from repro.core.schedulers.base import SchedulerBase, SchedulingContext
 from repro.faults import FaultEngine, FaultSpec
+from repro.monitoring.trace import span
 
 _EMPTY_IDS = np.array([], dtype=int)
 
@@ -187,6 +188,13 @@ class MultiJobEngine:
         # ``on_job_done(job, now)`` when a job completes (target reached,
         # max_rounds, or abandoned) — the admission-slot release signal.
         self.on_job_done: Optional[Callable[[int, float], None]] = None
+        # Observability (the spec's ``obs`` axis): ``events`` is an optional
+        # ``repro.monitoring.bus.EventBus`` the engine publishes
+        # ``round_begin`` / ``round`` / ``job_done`` to; ``obs`` is the
+        # owning ``ObsSession`` (closed by the run driver). Both None by
+        # default — the untraced path is unchanged.
+        self.events = None
+        self.obs = None
         self._heap: list = []
         self._seq = 0
         self._in_flight: Dict[int, dict] = {}
@@ -233,13 +241,14 @@ class MultiJobEngine:
             # stale event must not resurrect the job.
             return
         js.launched = True
-        ctx = self._make_ctx(job, now)
-        # Populate the context's per-round available-id cache here: the
-        # availability-independent derived arrays (float32 time mirror,
-        # available-id list) are computed at most once per _make_ctx and
-        # reused by greedy/FedCS and the fused searchers instead of being
-        # recomputed per candidate batch.
-        avail = int(ctx.available_indices().size)
+        with span("ctx_build", job=job, round=js.round_idx):
+            ctx = self._make_ctx(job, now)
+            # Populate the context's per-round available-id cache here: the
+            # availability-independent derived arrays (float32 time mirror,
+            # available-id list) are computed at most once per _make_ctx and
+            # reused by greedy/FedCS and the fused searchers instead of being
+            # recomputed per candidate batch.
+            avail = int(ctx.available_indices().size)
         if avail < ctx.n_sel:
             # Distinguish a transient shortage (devices will free soon) from
             # a PERMANENT one (devices failed forever / selection larger than
@@ -268,7 +277,10 @@ class MultiJobEngine:
                 heapq.heappush(self._heap, (nxt, self._seq, "retry", job))
                 self._seq += 1
                 return
-        plan = self.scheduler.schedule(ctx)
+        with span("schedule", job=job, round=js.round_idx):
+            plan = self.scheduler.schedule(ctx)
+        dispatch_span = span("dispatch", job=job, round=js.round_idx)
+        dispatch_span.__enter__()
         fe = self.fault_engine
         # Realized time includes any remaining busy time (release_horizon > 0).
         # Preallocated buffers: valid until this launch returns (nothing
@@ -396,32 +408,47 @@ class MultiJobEngine:
         )
         heapq.heappush(self._heap, (float(t_end), self._seq, "finish", job))
         self._seq += 1
+        # Close the dispatch span opened after the scheduling decision (the
+        # span is bookkeeping only: an exception above just drops the event).
+        dispatch_span.__exit__()
+        if self.events is not None:
+            self.events.publish("round_begin", dict(
+                job=job, round_idx=js.round_idx, t_start=now,
+                n_scheduled=int(sel_ids.size), n_survivors=int(survivors.size),
+                est_cost=self._in_flight[job]["est_cost"]))
 
     # ---- round completion ----
 
     def _finish(self, job: int, now: float) -> bool:
         js = self.jobs[job]
         f = self._in_flight.pop(job)
-        metrics = self.runtime.run_round(job, f["survivors"], js.round_idx)
-        self.counts[job][f["counted"]] += 1.0  # Formula 16
+        with span("aggregate", job=job, round=js.round_idx):
+            metrics = self.runtime.run_round(job, f["survivors"], js.round_idx)
+        with span("record", job=job, round=js.round_idx):
+            self.counts[job][f["counted"]] += 1.0  # Formula 16
 
-        self.records.append(RoundRecord(
-            job=job, round_idx=js.round_idx, t_start=f["t_start"], t_end=now,
-            round_time=f["round_time"], cost=f["cost"], fairness=f["fairness"],
-            loss=metrics["loss"], accuracy=metrics["accuracy"],
-            device_ids=f["survivors"], dropped=f["dropped"],
-            est_cost=f["est_cost"], degraded=f["degraded"],
-            corrupt_ids=f["corrupt"]))
+            self.records.append(RoundRecord(
+                job=job, round_idx=js.round_idx, t_start=f["t_start"],
+                t_end=now, round_time=f["round_time"], cost=f["cost"],
+                fairness=f["fairness"],
+                loss=metrics["loss"], accuracy=metrics["accuracy"],
+                device_ids=f["survivors"], dropped=f["dropped"],
+                est_cost=f["est_cost"], degraded=f["degraded"],
+                corrupt_ids=f["corrupt"]))
 
-        self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
-        js.total_round_time += f["round_time"]
-        js.round_idx += 1
+            self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
+            js.total_round_time += f["round_time"]
+            js.round_idx += 1
 
-        reached = metrics["accuracy"] >= js.config.target_metric
-        if reached and js.reached_target_at is None:
-            js.reached_target_at = now
-        if reached or js.round_idx >= js.config.max_rounds:
-            js.done = True
+            reached = metrics["accuracy"] >= js.config.target_metric
+            if reached and js.reached_target_at is None:
+                js.reached_target_at = now
+            if reached or js.round_idx >= js.config.max_rounds:
+                js.done = True
+            # Sink fan-out counts as recording: the metrics/audit JSONL
+            # writes happen inside the subscribed sinks.
+            if self.events is not None:
+                self.events.publish("round", self.records[-1])
         return js.done
 
     # ---- dynamic job set (online multi-tenant service) ----
@@ -509,16 +536,22 @@ class MultiJobEngine:
                       f"acc={r.accuracy:.4f} loss={r.loss:.4f} T={r.round_time:.1f}s")
             if not done:
                 self._launch(job, now)
-            elif self.on_job_done is not None:
-                self.on_job_done(job, now)
+            else:
+                if self.events is not None:
+                    self.events.publish("job_done", dict(
+                        job=job, t=now, rounds=self.jobs[job].round_idx,
+                        retired=self.jobs[job].retired))
+                if self.on_job_done is not None:
+                    self.on_job_done(job, now)
         return finished
 
     def run(self, verbose: bool = False,
             on_round: Optional[Callable[[RoundRecord], None]] = None) -> List[RoundRecord]:
-        for m in range(len(self.jobs)):
-            if not self.jobs[m].done and not self.jobs[m].launched:
-                self._launch(m, 0.0)
-        self.advance_until(np.inf, verbose=verbose, on_round=on_round)
+        with span("engine_run", jobs=len(self.jobs)):
+            for m in range(len(self.jobs)):
+                if not self.jobs[m].done and not self.jobs[m].launched:
+                    self._launch(m, 0.0)
+            self.advance_until(np.inf, verbose=verbose, on_round=on_round)
         return self.records
 
     # ---- summary (paper Tables 1/2/5 quantities) ----

@@ -52,6 +52,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.plans import plan_from_indices
+from repro.monitoring.trace import span
 
 logger = logging.getLogger(__name__)
 
@@ -333,13 +334,15 @@ def sa_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
     pos, cand, u = _swap_noise(rng, avail_idx, steps, chains, n_sel)
     fn = _sa_fn(int(steps), int(chains), int(n_sel), bool(delta_fairness),
                 _usable_search_shards(num_shards, chains))
-    best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
-                     jnp.asarray(_center(counts)), jnp.asarray(pos),
-                     jnp.asarray(cand), jnp.asarray(u),
-                     jnp.float32(alpha), jnp.float32(beta),
-                     jnp.float32(time_scale), jnp.float32(fairness_scale),
-                     jnp.float32(t0), jnp.float32(cooling))
-    return plan_from_indices(avail.shape[0], np.asarray(best_idx))
+    with span("sa_search", chains=int(chains), steps=int(steps)):
+        best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
+                         jnp.asarray(_center(counts)), jnp.asarray(pos),
+                         jnp.asarray(cand), jnp.asarray(u),
+                         jnp.float32(alpha), jnp.float32(beta),
+                         jnp.float32(time_scale), jnp.float32(fairness_scale),
+                         jnp.float32(t0), jnp.float32(cooling))
+        plan = plan_from_indices(avail.shape[0], np.asarray(best_idx))
+    return plan
 
 
 # ---- (b) fused genetic algorithm -----------------------------------------
@@ -536,15 +539,17 @@ def ga_search(rng: np.random.Generator, times: np.ndarray, counts: np.ndarray,
     mut_pos, mut_cand, _ = _swap_noise(rng, avail_idx, G, P, n_sel)
     fn = _ga_fn(int(P), int(G), int(n_sel), bool(delta_fairness),
                 _usable_search_shards(num_shards, P, pairs=True))
-    best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
-                     jnp.asarray(_center(counts)), jnp.asarray(tourn[0]),
-                     jnp.asarray(tourn[1]), jnp.asarray(cross_u),
-                     jnp.asarray(mut_u),
-                     jnp.asarray(mut_pos), jnp.asarray(mut_cand),
-                     jnp.float32(alpha), jnp.float32(beta),
-                     jnp.float32(time_scale), jnp.float32(fairness_scale),
-                     jnp.float32(mutation_rate))
-    return plan_from_indices(avail.shape[0], np.asarray(best_idx))
+    with span("ga_search", population=int(P), generations=int(G)):
+        best_idx, _ = fn(jnp.asarray(init), jnp.asarray(times, jnp.float32),
+                         jnp.asarray(_center(counts)), jnp.asarray(tourn[0]),
+                         jnp.asarray(tourn[1]), jnp.asarray(cross_u),
+                         jnp.asarray(mut_u),
+                         jnp.asarray(mut_pos), jnp.asarray(mut_cand),
+                         jnp.float32(alpha), jnp.float32(beta),
+                         jnp.float32(time_scale), jnp.float32(fairness_scale),
+                         jnp.float32(mutation_rate))
+        plan = plan_from_indices(avail.shape[0], np.asarray(best_idx))
+    return plan
 
 
 # ---- (c) batched BODS acquisition ----------------------------------------
@@ -869,13 +874,17 @@ def bods_acquire(rng: np.random.Generator, times: np.ndarray,
                   bool(delta_fairness), bool(local_search),
                   _usable_search_shards(num_shards, num_candidates))
     seed = jnp.uint32(int(rng.integers(0, 2**31 - 1)))
-    plan, cand_est = fn(
-        seed, jnp.asarray(times, jnp.float32), jnp.asarray(_center(counts)),
-        jnp.asarray(np.asarray(counts) == 0), jnp.asarray(avail),
-        jnp.asarray(mu, jnp.float32), jnp.asarray(mutants),
-        jnp.asarray(bool(use_base)), jnp.asarray(F),
-        jnp.asarray((y - est) / sd * valid, jnp.float32),
-        jnp.asarray(valid, jnp.float32), jnp.float32(1.0 / sd),
-        jnp.float32(alpha), jnp.float32(beta), jnp.float32(time_scale),
-        jnp.float32(fairness_scale), jnp.float32(gp_noise))
-    return np.asarray(plan), float(cand_est)
+    with span("bods_acquire", candidates=int(num_candidates),
+              mutants=int(n_mut)):
+        plan, cand_est = fn(
+            seed, jnp.asarray(times, jnp.float32),
+            jnp.asarray(_center(counts)),
+            jnp.asarray(np.asarray(counts) == 0), jnp.asarray(avail),
+            jnp.asarray(mu, jnp.float32), jnp.asarray(mutants),
+            jnp.asarray(bool(use_base)), jnp.asarray(F),
+            jnp.asarray((y - est) / sd * valid, jnp.float32),
+            jnp.asarray(valid, jnp.float32), jnp.float32(1.0 / sd),
+            jnp.float32(alpha), jnp.float32(beta), jnp.float32(time_scale),
+            jnp.float32(fairness_scale), jnp.float32(gp_noise))
+        out = np.asarray(plan), float(cand_est)
+    return out

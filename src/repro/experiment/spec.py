@@ -34,6 +34,7 @@ from repro.core.devices import DevicePool
 from repro.core.multijob import MultiJobEngine, RoundRecord
 from repro.experiment.registry import RUNTIMES, SCHEDULERS
 from repro.faults import FaultSpec
+from repro.monitoring.session import ObsSession, ObsSpec
 
 STUB_MODEL = "stub"
 
@@ -240,6 +241,10 @@ class ExperimentSpec:
     runtime: str = "synthetic"
     runtime_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     train: TrainSpec = TrainSpec()
+    # Observability axis (``repro.monitoring``): ``--set obs.trace_path=
+    # trace.json`` makes any run emit a Perfetto trace; ``obs.metrics_path``
+    # a per-round metrics JSONL; ``obs.audit_path`` the scheduler audit log.
+    obs: ObsSpec = ObsSpec()
     # Policy axis: name of a policy-zoo entry (``repro.gym.zoo``) to load
     # into the scheduler after construction — e.g. a gym-trained RLDS
     # policy, a saved BODS observation ring. A loaded policy ALWAYS
@@ -367,6 +372,9 @@ class ExperimentSpec:
             over_provision=self.over_provision,
             release_horizon=self.release_horizon,
             rng=np.random.default_rng(self.engine_seed))
+        if self.obs.active:
+            ObsSession(self.obs, scheduler=self.scheduler,
+                       process_name=self.name).attach(engine)
         return Experiment(spec=self, engine=engine)
 
     def run(self, verbose: bool = False,
@@ -397,6 +405,7 @@ class ExperimentSpec:
         if train.get("buckets") is not None:
             train["buckets"] = tuple(train["buckets"])
         d["train"] = TrainSpec(**train)
+        d["obs"] = ObsSpec(**d.get("obs", {}))
         if d.get("arrivals") is not None:
             d["arrivals"] = ArrivalsSpec(**d["arrivals"])
         if d.get("faults") is not None:
@@ -425,7 +434,8 @@ class ExperimentSpec:
         values — so ``spec.replace(train={"eval_every": 2})`` and the CLI's
         ``--set train={...}`` work without rebuilding the whole sub-spec."""
         _optional = {"arrivals": ArrivalsSpec, "faults": FaultSpec}
-        for key in ("pool", "cost", "fleet", "train", "arrivals", "faults"):
+        for key in ("pool", "cost", "fleet", "train", "obs", "arrivals",
+                    "faults"):
             v = changes.get(key)
             if isinstance(v, dict):
                 v = {k: (tuple(val) if k in self._NESTED_TUPLE_FIELDS
@@ -452,7 +462,13 @@ class Experiment:
             on_round: Optional[Callable[[RoundRecord], None]] = None
             ) -> "ExperimentResult":
         t0 = time.time()
-        self.engine.run(verbose=verbose, on_round=on_round)
+        try:
+            self.engine.run(verbose=verbose, on_round=on_round)
+        finally:
+            # Finalize the obs axis (trace write + sink close) even when a
+            # run dies mid-flight — partial traces are still loadable.
+            if self.engine.obs is not None:
+                self.engine.obs.close()
         return ExperimentResult(
             spec=self.spec, summary=self.engine.summary(),
             records=list(self.engine.records), wall_s=time.time() - t0)

@@ -48,6 +48,7 @@ import numpy as np
 from repro.config.base import JobConfig, ModelConfig
 from repro.fl.aggregation import fedavg, robust_fedavg
 from repro.models.cnn_zoo import cnn_apply, cnn_init, cnn_loss_and_accuracy
+from repro.monitoring.trace import counter, span
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "epochs", "batch_size", "lr"))
@@ -264,6 +265,9 @@ class FusedMultiRuntime:
         self.reject_mult = float(reject_mult)
         self.fault_engine = fault_engine
         self.rejected_total = 0.0
+        # Cumulative jit recompiles of the fused step (tracked per flush
+        # from the jit cache size; bucketing should keep this O(#buckets)).
+        self.recompiles = 0
         self._queued: Dict[int, tuple] = {}      # job -> (ids, round_idx)
         self._results: Dict[tuple, dict] = {}    # (job, round) -> metrics
         self._last: Dict[int, dict] = {}         # job -> last evaluated
@@ -348,11 +352,12 @@ class FusedMultiRuntime:
         # Sync happens HERE, per demand — a flush dispatches every pending
         # group asynchronously, so other jobs' rounds keep computing while
         # this one's metrics transfer and the engine does its bookkeeping.
-        _, loss, acc, ln = rec
-        out = {"loss": float(loss[ln]), "accuracy": float(acc[ln])}
-        if self.robust:
-            out["rejected"] = float(rej[ln])
-            self.rejected_total += out["rejected"]
+        with span("metrics_sync", job=job_id, round=round_idx):
+            _, loss, acc, ln = rec
+            out = {"loss": float(loss[ln]), "accuracy": float(acc[ln])}
+            if self.robust:
+                out["rejected"] = float(rej[ln])
+                self.rejected_total += out["rejected"]
         return out
 
     # ---- execution ----
@@ -382,18 +387,27 @@ class FusedMultiRuntime:
                     corrupt[ln, : len(ids)] = self.fault_engine.corrupt_mask(
                         jid, r, ids)
             fspec = getattr(self.fault_engine, "spec", None)
-            grp.params, loss, acc, rej = _fused_group_round(
-                grp.params, jnp.asarray(dev_ids), jnp.asarray(mask),
-                jnp.asarray(active), grp.x, grp.y, grp.partition, grp.sizes,
-                grp.eval_x, grp.eval_y, jnp.asarray(corrupt),
-                jnp.float32(self.reject_mult),
-                jnp.float32(fspec.corrupt_scale if fspec is not None
-                            else 1.0),
-                cfg=grp.cfg, epochs=grp.epochs,
-                batch_size=grp.batch_size, lr=grp.lr, do_eval=do_eval,
-                robust=self.robust,
-                corrupt_mode=(fspec.corrupt_mode if fspec is not None
-                              else "nan"))
+            cache_size = getattr(_fused_group_round, "_cache_size", None)
+            before = cache_size() if cache_size is not None else 0
+            with span("fused_round", jobs=len(pend), bucket=B,
+                      eval=bool(do_eval)):
+                grp.params, loss, acc, rej = _fused_group_round(
+                    grp.params, jnp.asarray(dev_ids), jnp.asarray(mask),
+                    jnp.asarray(active), grp.x, grp.y, grp.partition,
+                    grp.sizes, grp.eval_x, grp.eval_y, jnp.asarray(corrupt),
+                    jnp.float32(self.reject_mult),
+                    jnp.float32(fspec.corrupt_scale if fspec is not None
+                                else 1.0),
+                    cfg=grp.cfg, epochs=grp.epochs,
+                    batch_size=grp.batch_size, lr=grp.lr, do_eval=do_eval,
+                    robust=self.robust,
+                    corrupt_mode=(fspec.corrupt_mode if fspec is not None
+                                  else "nan"))
+            if cache_size is not None:
+                grew = cache_size() - before
+                if grew > 0:
+                    self.recompiles += grew
+                    counter("jit_recompiles", self.recompiles)
             for jid, ids, r in pend:
                 ln = grp.lane[jid]
                 if do_eval:

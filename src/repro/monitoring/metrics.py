@@ -1,9 +1,18 @@
 """Structured metrics logging (JSONL) + step timing.
 
-Production loops emit one JSONL record per step (append-only, crash-safe:
-each line is flushed); dashboards/tools tail the file. ``StepTimer`` keeps an
-EMA of step time and flags stragglers (steps > k x EMA) — the host-side
-counterpart of the engine's device-level straggler mitigation.
+Production loops emit one JSONL record per step; dashboards/tools tail the
+file. ``flush_every`` batches writes: the file is opened BLOCK-buffered and
+flushed explicitly every N records (N=1, the default, keeps the historical
+crash-safe line-at-a-time behavior). ``close()`` always flushes the tail;
+both the logger and ``SchedulerAudit`` are context managers so no run leaks
+an open file handle. ``StepTimer`` keeps an EMA of step time and flags
+stragglers (steps > k x EMA) — the host-side counterpart of the engine's
+device-level straggler mitigation.
+
+``MetricsLogger.on_round`` is the engine sink: subscribe it to an
+``EventBus`` ``round`` topic (``repro.monitoring.session`` does this from
+the spec's ``obs`` axis) and every finished ``RoundRecord`` becomes one
+JSONL row — the input half of ``python -m repro.monitoring report``.
 """
 
 from __future__ import annotations
@@ -16,8 +25,13 @@ from typing import Any, Dict, Optional
 
 class MetricsLogger:
     def __init__(self, path: str, flush_every: int = 1):
+        if flush_every < 1:
+            raise ValueError(f"flush_every must be >= 1, got {flush_every}")
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        self._f = open(path, "a", buffering=1)
+        # Block-buffered on purpose: the explicit flush below is the ONLY
+        # flush cadence, so flush_every genuinely batches small writes
+        # (buffering=1 would flush every line and make the knob dead code).
+        self._f = open(path, "a")
         self._flush_every = flush_every
         self._n = 0
 
@@ -28,8 +42,32 @@ class MetricsLogger:
         if self._n % self._flush_every == 0:
             self._f.flush()
 
+    def on_round(self, rec) -> None:
+        """Event-bus sink: one JSONL row per finished ``RoundRecord``."""
+        self.log(rec.round_idx, {
+            "job": rec.job, "t_start": rec.t_start, "t_end": rec.t_end,
+            "round_time": rec.round_time, "cost": rec.cost,
+            "fairness": rec.fairness, "loss": rec.loss,
+            "accuracy": rec.accuracy, "est_cost": rec.est_cost,
+            "degraded": bool(rec.degraded),
+            "n_devices": int(len(rec.device_ids)),
+            "n_dropped": int(len(rec.dropped))})
+
+    def flush(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+
     def close(self) -> None:
-        self._f.close()
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 class StepTimer:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.multijob import MultiJobEngine, RoundRecord
 from repro.experiment.spec import ExperimentSpec
+from repro.monitoring.trace import instant, span
 from repro.serve.metrics import ServiceMetrics, ServiceReport
 from repro.serve.traffic import TrafficEvent, trace_from_spec
 
@@ -191,6 +192,13 @@ class SchedulerService:
             # ALL its admissions gets the freed slot.
             self._queue.sort(key=lambda t: self.metrics.tenants[t].rounds)
             tenant = self._queue.pop(0)
+            queued_at = self.metrics.tenants[tenant].queued_at
+            if queued_at is not None:
+                wait = float(now - queued_at)
+                instant("queue_wait", tenant=tenant, wait_s=wait)
+                if self.engine.events is not None:
+                    self.engine.events.publish("serve.queue_wait", dict(
+                        tenant=tenant, t=now, wait_s=wait))
             self.metrics.tenants[tenant].queued_at = None
             self._admit(tenant, self._tenant_template[tenant], now)
 
@@ -214,6 +222,10 @@ class SchedulerService:
         self._tenant_job[tenant] = job
         self._job_tenant[job] = tenant
         self.metrics.tenants[tenant].admissions += 1
+        if eng.events is not None:
+            eng.events.publish("serve.admit", dict(
+                tenant=tenant, job=job, template=template, t=now,
+                live=len(self._live), warm=saved is not None))
         if self.verbose:
             print(f"[t={now:9.1f}s] admit  {tenant} -> job{job} "
                   f"(template {template}, live={len(self._live)})")
@@ -225,43 +237,45 @@ class SchedulerService:
         current world state — the admission decision's inputs."""
         eng = self.engine
         costs: Dict[int, float] = {}
-        for job in sorted(self._live):
-            if eng.jobs[job].done:
-                continue
-            if self.rescore_mode == "incremental":
-                key = (eng.pool.version, eng.jobs[job].round_idx)
-                cached = self._rescore_cache.get(job)
-                if cached is not None and cached[0] == key:
-                    costs[job] = cached[1]
+        with span("rescore", mode=self.rescore_mode, live=len(self._live)):
+            for job in sorted(self._live):
+                if eng.jobs[job].done:
                     continue
-                # Score the job's CURRENT plan under the post-churn time
-                # model — wait-free (its own devices are mid-round busy;
-                # full-search also plans over wait-free devices, so this is
-                # the comparable quantity). ``pool.expected_times`` is the
-                # per-(job, tau) memo that churn invalidation refreshes:
-                # unchanged world -> pure cache lookups end to end.
-                cm = eng.cost_model
-                tau = eng.jobs[job].config.local_epochs
-                times = eng.pool.expected_times(job, tau)
-                f = eng._in_flight.get(job)
-                if f is not None:
-                    plan = f["plan"]
+                if self.rescore_mode == "incremental":
+                    key = (eng.pool.version, eng.jobs[job].round_idx)
+                    cached = self._rescore_cache.get(job)
+                    if cached is not None and cached[0] == key:
+                        costs[job] = cached[1]
+                        continue
+                    # Score the job's CURRENT plan under the post-churn time
+                    # model — wait-free (its own devices are mid-round busy;
+                    # full-search also plans over wait-free devices, so this
+                    # is the comparable quantity). ``pool.expected_times`` is
+                    # the per-(job, tau) memo that churn invalidation
+                    # refreshes: unchanged world -> pure cache lookups end to
+                    # end.
+                    cm = eng.cost_model
+                    tau = eng.jobs[job].config.local_epochs
+                    times = eng.pool.expected_times(job, tau)
+                    f = eng._in_flight.get(job)
+                    if f is not None:
+                        plan = f["plan"]
+                    else:
+                        # Between rounds (waiting on a retry): cheapest-n
+                        # closed-form stand-in.
+                        plan = np.zeros(eng.pool.num_devices, dtype=bool)
+                        plan[np.argsort(times)[: eng.n_sel]] = True
+                    c = float(cm.total_cost_batch(
+                        job=job, tau=tau, counts=eng.counts[job],
+                        plans=plan[None], other_costs=0.0, times=times)[0])
+                    self._rescore_cache[job] = (key, c)
+                    costs[job] = c
                 else:
-                    # Between rounds (waiting on a retry): cheapest-n
-                    # closed-form stand-in.
-                    plan = np.zeros(eng.pool.num_devices, dtype=bool)
-                    plan[np.argsort(times)[: eng.n_sel]] = True
-                c = float(cm.total_cost_batch(
-                    job=job, tau=tau, counts=eng.counts[job],
-                    plans=plan[None], other_costs=0.0, times=times)[0])
-                self._rescore_cache[job] = (key, c)
-                costs[job] = c
-            else:
-                self._cold.ensure_jobs(len(eng.jobs))
-                ctx = eng._make_ctx(job, now)
-                self._cold.schedule(ctx)
-                est = self._cold.last_estimated_cost
-                costs[job] = float(est) if est is not None else 0.0
+                    self._cold.ensure_jobs(len(eng.jobs))
+                    ctx = eng._make_ctx(job, now)
+                    self._cold.schedule(ctx)
+                    est = self._cold.last_estimated_cost
+                    costs[job] = float(est) if est is not None else 0.0
         self.rescore_costs.append(
             float(np.mean(list(costs.values()))) if costs else 0.0)
         return costs
@@ -298,12 +312,18 @@ class SchedulerService:
                 return  # already finished (slot released via on_job_done)
             self._tenant_saved[ev.tenant] = eng.scheduler.job_state_dict(job)
             eng.retire_job(job, now=now)
+            if eng.events is not None:
+                eng.events.publish("serve.depart", dict(
+                    tenant=ev.tenant, job=job, t=now))
             if self.verbose:
                 print(f"[t={now:9.1f}s] retire {ev.tenant} (job{job})")
             self._release(job, now)
         elif ev.kind == "churn_out":
             self.metrics.churn_events += 1
             eng.pool.depart(ev.devices)
+            if eng.events is not None:
+                eng.events.publish("serve.churn", dict(
+                    kind="out", t=now, n=len(ev.devices)))
         elif ev.kind == "churn_in":
             self.metrics.churn_events += 1
             if ev.drift != 1.0:
@@ -311,6 +331,9 @@ class SchedulerService:
                 eng.pool.rejoin(ids, a=eng.pool.a[ids] * ev.drift)
             else:
                 eng.pool.rejoin(ev.devices)
+            if eng.events is not None:
+                eng.events.publish("serve.churn", dict(
+                    kind="in", t=now, n=len(ev.devices), drift=ev.drift))
 
     # ---- the event loop ----
 
@@ -330,26 +353,42 @@ class SchedulerService:
                 arr, len(self.templates), eng.pool.num_devices)
         self.trace = trace
         t0 = time.perf_counter()
-        for i in range(self._next_event, len(trace)):
-            ev = trace[i]
-            eng.advance_until(ev.t, on_round=self._on_round)
-            self._handle(ev)
-            self.metrics.events_processed += 1
-            self.metrics.sample_queue_depth(len(self._queue))
-            self._next_event = i + 1
-            if (self._ckpt_manager is not None and self.checkpoint_every > 0
-                    and self._next_event % self.checkpoint_every == 0):
-                from repro.serve.persistence import save_service_checkpoint
+        try:
+            for i in range(self._next_event, len(trace)):
+                ev = trace[i]
+                with span("serve_advance", until=ev.t):
+                    eng.advance_until(ev.t, on_round=self._on_round)
+                with span("handle_event", kind=ev.kind):
+                    self._handle(ev)
+                self.metrics.events_processed += 1
+                self.metrics.sample_queue_depth(len(self._queue))
+                self._next_event = i + 1
+                if (self._ckpt_manager is not None
+                        and self.checkpoint_every > 0
+                        and self._next_event % self.checkpoint_every == 0):
+                    from repro.serve.persistence import save_service_checkpoint
 
-                save_service_checkpoint(self, self._next_event)
-            if self.crash_after is not None and self._next_event >= self.crash_after:
-                raise SimulatedCrash(
-                    f"crash_after={self.crash_after}: simulated hard kill "
-                    f"after event {self._next_event}")
-        # Drain: live jobs run to completion; finishing jobs release slots,
-        # which admits queued tenants mid-drain (on_job_done fires inside
-        # advance_until, so late admissions still execute).
-        eng.advance_until(np.inf, on_round=self._on_round)
+                    with span("checkpoint_write", step=self._next_event):
+                        save_service_checkpoint(self, self._next_event)
+                    if eng.events is not None:
+                        eng.events.publish("serve.checkpoint", dict(
+                            step=self._next_event, t=ev.t))
+                if (self.crash_after is not None
+                        and self._next_event >= self.crash_after):
+                    raise SimulatedCrash(
+                        f"crash_after={self.crash_after}: simulated hard "
+                        f"kill after event {self._next_event}")
+            # Drain: live jobs run to completion; finishing jobs release
+            # slots, which admits queued tenants mid-drain (on_job_done
+            # fires inside advance_until, so late admissions still execute).
+            with span("serve_advance", until=float("inf")):
+                eng.advance_until(np.inf, on_round=self._on_round)
+        finally:
+            # The spec's obs axis hung a session on the engine at build();
+            # the service owns the run, so it finalizes (trace write + sink
+            # close) even on a simulated crash.
+            if eng.obs is not None:
+                eng.obs.close()
         self.last_report = self.metrics.report(
             sim_horizon=arr.horizon, wall_s=time.perf_counter() - t0)
         return self.last_report

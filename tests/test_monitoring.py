@@ -52,3 +52,52 @@ def test_audit_log_with_engine(tmp_path):
     recs = replay(str(tmp_path / "audit.jsonl"))
     assert len(recs) == len(eng.records)
     assert all(len(r["devices"]) == 3 for r in recs)
+
+
+def test_metrics_flush_every_batches_writes(tmp_path):
+    p = tmp_path / "m.jsonl"
+    log = MetricsLogger(str(p), flush_every=3)
+    log.log(1, {"v": 1.0})
+    log.log(2, {"v": 2.0})
+    # Block-buffered + no flush yet: nothing has reached the file.
+    assert p.read_text() == ""
+    log.log(3, {"v": 3.0})                       # 3rd record -> flush
+    assert len(p.read_text().splitlines()) == 3
+    log.log(4, {"v": 4.0})
+    log.close()                                  # close flushes the tail
+    assert len(p.read_text().splitlines()) == 4
+    log.close()                                  # idempotent
+
+
+def test_metrics_flush_every_validated(tmp_path):
+    import pytest
+
+    with pytest.raises(ValueError, match="flush_every"):
+        MetricsLogger(str(tmp_path / "m.jsonl"), flush_every=0)
+
+
+def test_metrics_and_audit_context_managers(tmp_path):
+    with MetricsLogger(str(tmp_path / "m.jsonl")) as log:
+        log.log(1, {"v": 1.0})
+    assert log._f.closed
+    with SchedulerAudit(str(tmp_path / "a.jsonl")) as audit:
+        pass
+    assert audit._f.closed
+
+
+def test_audit_records_estimate_degraded_and_scheduler(tmp_path):
+    from types import SimpleNamespace
+
+    p = tmp_path / "audit.jsonl"
+    audit = SchedulerAudit(str(p), scheduler="bods")
+    audit.on_round(SimpleNamespace(
+        job=1, round_idx=4, t_start=0.0, t_end=9.5, round_time=9.5,
+        cost=3.25, est_cost=np.float64(3.0), fairness=1.5, degraded=True,
+        loss=0.4, accuracy=0.75, device_ids=np.array([2, 5]),
+        dropped=np.array([7])))
+    audit.close()
+    (rec,) = replay(str(p))
+    assert rec["scheduler"] == "bods"
+    assert rec["est_cost"] == 3.0 and isinstance(rec["est_cost"], float)
+    assert rec["degraded"] is True
+    assert rec["devices"] == [2, 5] and rec["dropped"] == [7]
