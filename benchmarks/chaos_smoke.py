@@ -20,6 +20,14 @@ Gates (written to ``BENCH_chaos.json``, enforced in CI chaos-smoke):
   domain outages, and corrupted uploads.
 
   PYTHONPATH=src python -m benchmarks.chaos_smoke
+  PYTHONPATH=src python -m benchmarks.chaos_smoke --overload
+
+``--overload`` swaps the spec for the ``slo-overload`` preset (overload
+traffic + faults + the full SLO resilience stack: degradation ladder,
+shedding, circuit breakers, bounded retries, watchdog) and additionally
+gates on the degradation histogram being non-empty — crash consistency
+must hold WHILE the service is actively degrading, not just in steady
+state. Output goes to ``BENCH_overload_chaos.json``.
 """
 
 from __future__ import annotations
@@ -41,10 +49,17 @@ def _serve(args, cwd):
                           cwd=cwd, env=env, capture_output=True, text=True)
 
 
-def _spec_json() -> dict:
+def _spec_json(overload: bool = False) -> dict:
     from repro.experiment.presets import get_preset
     from repro.faults import FaultSpec
 
+    if overload:
+        # The slo-overload preset: arrivals ~3x faster than the drain rate
+        # over a faulty fleet, with the queue-depth degradation ladder,
+        # shedding, breakers, bounded retries, and the watchdog all armed —
+        # and NO wall-clock deadline, so the trajectory (including fired
+        # rungs) must replay bit-identically across kill -9 + resume.
+        return get_preset("slo-overload", horizon=8_000.0).to_dict()
     spec = get_preset("online-smoke", scheduler="bods", num_devices=40,
                       horizon=10_000.0, interarrival=700.0)
     spec = spec.replace(faults=FaultSpec(
@@ -55,16 +70,25 @@ def _spec_json() -> dict:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--overload", action="store_true",
+                    help="run the slo-overload preset instead: overload "
+                         "traffic + faults + the full resilience stack; "
+                         "adds a non-empty-degradation-histogram gate")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_chaos.json, or "
+                         "BENCH_overload_chaos.json with --overload)")
     ap.add_argument("--crash-after", type=int, default=7)
     ap.add_argument("--checkpoint-every", type=int, default=3)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = ("BENCH_overload_chaos.json" if args.overload
+                    else "BENCH_chaos.json")
 
     failures = []
     with tempfile.TemporaryDirectory() as tmp:
         spec_path = os.path.join(tmp, "spec.json")
         with open(spec_path, "w") as f:
-            json.dump(_spec_json(), f)
+            json.dump(_spec_json(args.overload), f)
 
         print("== reference arm (uninterrupted) ==")
         ref = _serve(["--spec", spec_path,
@@ -91,6 +115,7 @@ def main(argv=None) -> None:
                             f"{res.stderr[-2000:]}")
 
         records_ref = records_res = []
+        rungs = {}
         if not failures:
             with open(os.path.join(tmp, "ref.json")) as f:
                 records_ref = json.load(f)
@@ -117,10 +142,23 @@ def main(argv=None) -> None:
                                 f"(dropped={dropped}, corrupt={corrupt})")
             print(f"  {len(records_ref)} rounds bit-identical across "
                   f"kill -9 + resume; dropped={dropped} corrupt={corrupt}")
+            if args.overload:
+                for r in records_ref:
+                    if r.get("rung") is not None:
+                        rungs[r["rung"]] = rungs.get(r["rung"], 0) + 1
+                degraded = sum(v for k, v in rungs.items() if k != "full")
+                if degraded == 0:
+                    failures.append(
+                        "overload arm never degraded — the ladder was "
+                        "inert (empty degradation histogram)")
+                hist = " ".join(f"{k}={v}" for k, v in sorted(rungs.items()))
+                print(f"  degradation histogram: {hist or 'EMPTY'}")
 
-    out = {"crash_after": args.crash_after,
+    out = {"overload": args.overload,
+           "crash_after": args.crash_after,
            "checkpoint_every": args.checkpoint_every,
            "rounds": len(records_ref),
+           "rung_counts": rungs,
            "gate": {"failures": failures}}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

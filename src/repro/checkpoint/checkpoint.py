@@ -24,6 +24,8 @@ import json
 import os
 import shutil
 import tempfile
+import warnings
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -114,17 +116,15 @@ def committed_steps(directory: str) -> List[int]:
 _committed_steps = committed_steps
 
 
-def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
-                    shardings: Optional[PyTree] = None
-                    ) -> Tuple[int, PyTree, Dict[str, Any]]:
-    """Restore the newest (or given) committed step into the structure of
-    ``like``. If ``shardings`` is given, leaves are device_put against it
-    (elastic re-shard onto the current mesh)."""
-    steps = _committed_steps(directory)
-    if not steps:
-        raise FileNotFoundError(f"no committed checkpoints in {directory}")
-    step = steps[-1] if step is None else step
-    path = step_path(directory, step)
+# Failure modes a damaged-on-disk step presents as: missing/short files
+# (OSError, EOFError), garbled JSON, an npz whose zip directory is torn
+# (zipfile.BadZipFile or ValueError from numpy), or a manifest missing keys.
+_CORRUPT_ERRORS = (OSError, ValueError, KeyError, json.JSONDecodeError,
+                   zipfile.BadZipFile, EOFError)
+
+
+def _load_step(path: str, like: PyTree, shardings: Optional[PyTree]
+               ) -> Tuple[PyTree, Dict[str, Any]]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -138,7 +138,43 @@ def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
                   for l, fl, s in zip(leaves, flat_like, flat_sh)]
     else:
         leaves = [np.asarray(l, dtype=fl.dtype) for l, fl in zip(leaves, flat_like)]
-    return step, treedef.unflatten(leaves), manifest["extra"]
+    return treedef.unflatten(leaves), manifest["extra"]
+
+
+def load_checkpoint(directory: str, like: PyTree, step: Optional[int] = None,
+                    shardings: Optional[PyTree] = None
+                    ) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore the newest (or given) committed step into the structure of
+    ``like``. If ``shardings`` is given, leaves are device_put against it
+    (elastic re-shard onto the current mesh).
+
+    When ``step`` is None and the newest committed step is unreadable
+    (torn write that still managed to land a marker, disk bit-rot), older
+    committed steps are tried newest-first — losing one save interval
+    beats refusing to resume. An explicitly requested ``step`` still
+    raises: the caller asked for THAT state, not a neighbor's.
+    """
+    steps = _committed_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    if step is not None:
+        tree, extra = _load_step(step_path(directory, step), like, shardings)
+        return step, tree, extra
+    last_err: Optional[BaseException] = None
+    for s in reversed(steps):
+        try:
+            tree, extra = _load_step(step_path(directory, s), like, shardings)
+        except _CORRUPT_ERRORS as e:
+            warnings.warn(
+                f"checkpoint step {s} in {directory} is unreadable "
+                f"({type(e).__name__}: {e}); falling back to the previous "
+                f"committed step", stacklevel=2)
+            last_err = e
+            continue
+        return s, tree, extra
+    raise FileNotFoundError(
+        f"all {len(steps)} committed checkpoints in {directory} are "
+        f"unreadable (last error: {last_err!r})")
 
 
 class CheckpointManager:

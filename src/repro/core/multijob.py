@@ -99,6 +99,16 @@ class RoundRecord:
     # robust runtime, or oracle-discarded by the engine otherwise).
     corrupt_ids: np.ndarray = dataclasses.field(
         default_factory=lambda: np.array([], dtype=int))
+    # Fault-failed devices this round (subset of ``dropped``; the breaker
+    # board keys tenant/domain health on these).
+    failed_ids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.array([], dtype=int))
+    # SLO axis: which degradation-ladder rung produced the plan (None when
+    # no governor is attached) and the measured decision latency in ms
+    # (recorded ONLY when a wall-clock deadline is active — it is not
+    # replayable, so the deterministic modes keep records bit-identical).
+    rung: Optional[str] = None
+    decision_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -195,6 +205,16 @@ class MultiJobEngine:
         # default — the untraced path is unchanged.
         self.events = None
         self.obs = None
+        # SLO resilience (``repro.serve.resilience.attach_resilience``):
+        # ``governor`` routes scheduling decisions through the degradation
+        # ladder; the retry knobs bound the historical retry-forever /
+        # fail-fast paths. Defaults keep legacy behavior bit-identically.
+        self.governor = None
+        self.max_launch_retries: Optional[int] = None
+        self.retry_backoff = 2.0
+        self.retry_base_delay = 1.0
+        self.max_agg_retries = 0
+        self._retry_counts: Dict[int, int] = {}
         self._heap: list = []
         self._seq = 0
         self._in_flight: Dict[int, dict] = {}
@@ -270,15 +290,36 @@ class MultiJobEngine:
                         "clamping", RuntimeWarning)
                 ctx.n_sel = reachable
             if avail < ctx.n_sel:
-                # Transient: wait for the next FINITE release event.
-                b = self.pool.busy_until
-                pending = b[(b > now) & np.isfinite(b)]
-                nxt = float(pending.min()) if pending.size else now + 1.0
-                heapq.heappush(self._heap, (nxt, self._seq, "retry", job))
-                self._seq += 1
-                return
+                tries = self._retry_counts.get(job, 0)
+                if (self.max_launch_retries is not None
+                        and tries >= self.max_launch_retries and avail >= 1):
+                    # Retry budget exhausted with SOME devices reachable:
+                    # launch a clamped cohort now instead of waiting for a
+                    # full one (bounded-retry SLO semantics).
+                    ctx.n_sel = avail
+                else:
+                    # Transient: wait for the next FINITE release event —
+                    # with a bounded budget, exponential simulated-time
+                    # backoff widens each successive wait.
+                    b = self.pool.busy_until
+                    pending = b[(b > now) & np.isfinite(b)]
+                    nxt = float(pending.min()) if pending.size else now + 1.0
+                    if self.max_launch_retries is not None:
+                        self._retry_counts[job] = tries + 1
+                        nxt = max(nxt, now + self.retry_base_delay
+                                  * self.retry_backoff ** tries)
+                    heapq.heappush(self._heap, (nxt, self._seq, "retry", job))
+                    self._seq += 1
+                    return
+        self._retry_counts.pop(job, None)
         with span("schedule", job=job, round=js.round_idx):
-            plan = self.scheduler.schedule(ctx)
+            if self.governor is not None:
+                plan, rung, decision_ms, gov_est = self.governor.decide(
+                    self.scheduler, ctx, now)
+            else:
+                plan = self.scheduler.schedule(ctx)
+                rung = decision_ms = None
+                gov_est = getattr(self.scheduler, "last_estimated_cost", None)
         dispatch_span = span("dispatch", job=job, round=js.round_idx)
         dispatch_span.__enter__()
         fe = self.fault_engine
@@ -403,7 +444,7 @@ class MultiJobEngine:
                 [dropped_straggler, failed, deadline_dropped]),
             corrupt=corrupt_ids, degraded=degraded,
             t_start=now, cost=cost, fairness=fairness, round_time=round_time,
-            est_cost=getattr(self.scheduler, "last_estimated_cost", None),
+            est_cost=gov_est, rung=rung, decision_ms=decision_ms,
             ctx=ctx,
         )
         heapq.heappush(self._heap, (float(t_end), self._seq, "finish", job))
@@ -423,7 +464,36 @@ class MultiJobEngine:
         js = self.jobs[job]
         f = self._in_flight.pop(job)
         with span("aggregate", job=job, round=js.round_idx):
-            metrics = self.runtime.run_round(job, f["survivors"], js.round_idx)
+            # Bounded aggregation retries (SLO axis): 0 keeps the historical
+            # fail-fast raise; N retries the dispatch, then records a
+            # degraded round carrying the job's previous metrics forward.
+            tries = 0
+            while True:
+                try:
+                    metrics = self.runtime.run_round(
+                        job, f["survivors"], js.round_idx)
+                    break
+                except Exception as e:
+                    if self.max_agg_retries <= 0:
+                        raise
+                    if tries >= self.max_agg_retries:
+                        prev = next((r for r in reversed(self.records)
+                                     if r.job == job), None)
+                        metrics = {
+                            "loss": prev.loss if prev is not None else 0.0,
+                            "accuracy": (prev.accuracy
+                                         if prev is not None else 0.0)}
+                        f["degraded"] = True
+                        warnings.warn(
+                            f"job {job} round {js.round_idx}: aggregation "
+                            f"failed after {tries} retries ({e!r}); "
+                            "recording a degraded round", RuntimeWarning)
+                        if self.events is not None:
+                            self.events.publish("serve.agg_failed", dict(
+                                job=job, round_idx=js.round_idx, t=now,
+                                retries=tries, error=repr(e)))
+                        break
+                    tries += 1
         with span("record", job=job, round=js.round_idx):
             self.counts[job][f["counted"]] += 1.0  # Formula 16
 
@@ -434,7 +504,8 @@ class MultiJobEngine:
                 loss=metrics["loss"], accuracy=metrics["accuracy"],
                 device_ids=f["survivors"], dropped=f["dropped"],
                 est_cost=f["est_cost"], degraded=f["degraded"],
-                corrupt_ids=f["corrupt"]))
+                corrupt_ids=f["corrupt"], failed_ids=f["failed"],
+                rung=f.get("rung"), decision_ms=f.get("decision_ms")))
 
             self.scheduler.observe(f["ctx"], f["plan"], f["cost"])
             js.total_round_time += f["round_time"]
@@ -619,11 +690,16 @@ class MultiJobEngine:
                 est_cost=(None if f["est_cost"] is None
                           else float(f["est_cost"])),
                 degraded=bool(f["degraded"]),
+                rung=f.get("rung"),
+                decision_ms=(None if f.get("decision_ms") is None
+                             else float(f["decision_ms"])),
                 ctx_round_idx=int(ctx.round_idx), ctx_tau=float(ctx.tau),
                 ctx_n_sel=int(ctx.n_sel),
                 ctx_other_costs=float(ctx.other_costs))
         return dict(
             clock=self.clock, seq=self._seq,
+            retry_counts={str(j): int(c)
+                          for j, c in sorted(self._retry_counts.items())},
             heap=[[float(t), int(s), k, int(j)] for t, s, k, j in self._heap],
             clamp_warned=sorted(self._clamp_warned),
             n_sel=self.n_sel, over_provision=self.over_provision,
@@ -648,6 +724,8 @@ class MultiJobEngine:
                       for t, s, k, j in meta["heap"]]
         heapq.heapify(self._heap)
         self._clamp_warned = set(meta["clamp_warned"])
+        self._retry_counts = {int(j): int(c) for j, c
+                              in meta.get("retry_counts", {}).items()}
         self.n_sel = int(meta["n_sel"])
         self.over_provision = float(meta["over_provision"])
         self.rng.bit_generator.state = meta["rng"]
@@ -687,4 +765,5 @@ class MultiJobEngine:
                 t_start=float(fm["t_start"]), cost=float(fm["cost"]),
                 fairness=float(fm["fairness"]),
                 round_time=float(fm["round_time"]),
-                est_cost=fm["est_cost"], ctx=ctx)
+                est_cost=fm["est_cost"], rung=fm.get("rung"),
+                decision_ms=fm.get("decision_ms"), ctx=ctx)

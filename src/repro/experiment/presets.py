@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 from repro.experiment.registry import Registry
+from repro.experiment.slo import SLOSpec
 from repro.experiment.spec import (ArrivalsSpec, ExperimentSpec, FleetSpec,
                                    JobSpec, PoolSpec)
 from repro.faults import FaultSpec
@@ -177,6 +178,37 @@ def online_smoke(scheduler: str = "bods", num_devices: int = 60,
             max_concurrent=max_concurrent,
             churn_interarrival=4_000.0, churn_fraction=0.05,
             rejoin_after=2_000.0, drift=1.3))
+
+
+@register_preset("slo-overload")
+def slo_overload(scheduler: str = "bods", num_devices: int = 40,
+                 horizon: float = 12_000.0, interarrival: float = 350.0,
+                 max_concurrent: int = 2, max_queue_depth: int = 3,
+                 breaker_threshold: int = 2,
+                 watchdog_rounds: int = 5, seed: int = 3) -> ExperimentSpec:
+    """Overload + chaos regime for the SLO axis: the online-smoke tenant
+    catalogue arriving ~3x faster than the service can drain it, over a
+    faulty fleet (dropouts, crashes, a domain outage schedule, corrupted
+    uploads), with the full resilience stack armed — queue-depth
+    degradation ladder, admission shedding, per-tenant/per-domain circuit
+    breakers, bounded launch/aggregation retries, and the stalled-round
+    watchdog. Deliberately leaves ``slo.decision_deadline_ms`` unset so the
+    trajectory (including fired rungs) is bit-identical across crash/resume
+    — the overload-chaos CI arm depends on that."""
+    spec = online_smoke(scheduler=scheduler, num_devices=num_devices,
+                        horizon=horizon, interarrival=interarrival,
+                        max_concurrent=max_concurrent, seed=seed)
+    return spec.replace(
+        name=f"slo-overload-{scheduler}",
+        faults=FaultSpec(
+            seed=seed, dropout_rate=0.12, crash_rate=0.002,
+            straggler_rate=0.10, straggler_slowdown=3.0,
+            num_domains=4, domain_outage_rate=0.03, corrupt_rate=0.05),
+        slo=SLOSpec(
+            max_queue_depth=max_queue_depth, shed_policy="defer",
+            breaker_threshold=breaker_threshold, breaker_cooldown=2_000.0,
+            watchdog_rounds=watchdog_rounds,
+            max_launch_retries=3, max_agg_retries=1))
 
 
 @register_preset("fault-injection")

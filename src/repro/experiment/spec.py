@@ -33,6 +33,7 @@ from repro.core.cost import CostModel
 from repro.core.devices import DevicePool
 from repro.core.multijob import MultiJobEngine, RoundRecord
 from repro.experiment.registry import RUNTIMES, SCHEDULERS
+from repro.experiment.slo import SLOSpec
 from repro.faults import FaultSpec
 from repro.monitoring.session import ObsSession, ObsSpec
 
@@ -263,6 +264,11 @@ class ExperimentSpec:
     # ``failure_rate > 0`` maps the deprecated alias below onto the axis
     # (``effective_faults``).
     faults: Optional[FaultSpec] = None
+    # Serve-resilience axis (``repro.experiment.slo.SLOSpec``): decision
+    # deadlines + degradation ladder, admission backpressure, circuit
+    # breakers, bounded retries, and the stalled-round watchdog. None or an
+    # inert spec leaves trajectories bit-identical to the legacy paths.
+    slo: Optional[SLOSpec] = None
     # DEPRECATED alias (uniform transient dropouts, fixed cooldown) — kept
     # for old spec JSONs; subsumed by the ``faults`` axis, which wins when
     # both are set.
@@ -305,6 +311,14 @@ class ExperimentSpec:
             return FaultSpec.from_legacy(self.failure_rate,
                                          self.failure_cooldown,
                                          seed=self.engine_seed)
+        return None
+
+    def effective_slo(self) -> Optional[SLOSpec]:
+        """The resolved resilience axis: the ``slo`` spec when set and NOT
+        inert (an inert spec must change nothing — the bit-identity
+        contract), else None."""
+        if self.slo is not None and not self.slo.inert:
+            return self.slo
         return None
 
     def effective_num_shards(self) -> int:
@@ -372,6 +386,12 @@ class ExperimentSpec:
             over_provision=self.over_provision,
             release_horizon=self.release_horizon,
             rng=np.random.default_rng(self.engine_seed))
+        slo = self.effective_slo()
+        if slo is not None:
+            # Lazy import: repro.serve imports this module at package level.
+            from repro.serve.resilience import attach_resilience
+
+            attach_resilience(engine, slo)
         if self.obs.active:
             ObsSession(self.obs, scheduler=self.scheduler,
                        process_name=self.name).attach(engine)
@@ -410,6 +430,8 @@ class ExperimentSpec:
             d["arrivals"] = ArrivalsSpec(**d["arrivals"])
         if d.get("faults") is not None:
             d["faults"] = FaultSpec(**d["faults"])
+        if d.get("slo") is not None:
+            d["slo"] = SLOSpec(**d["slo"])
         return cls(**d)
 
     @classmethod
@@ -433,9 +455,10 @@ class ExperimentSpec:
         axes (``pool``/``cost``/``fleet``/``train``), merged over the current
         values — so ``spec.replace(train={"eval_every": 2})`` and the CLI's
         ``--set train={...}`` work without rebuilding the whole sub-spec."""
-        _optional = {"arrivals": ArrivalsSpec, "faults": FaultSpec}
+        _optional = {"arrivals": ArrivalsSpec, "faults": FaultSpec,
+                     "slo": SLOSpec}
         for key in ("pool", "cost", "fleet", "train", "obs", "arrivals",
-                    "faults"):
+                    "faults", "slo"):
             v = changes.get(key)
             if isinstance(v, dict):
                 v = {k: (tuple(val) if k in self._NESTED_TUPLE_FIELDS
@@ -479,6 +502,7 @@ def _record_to_dict(r: RoundRecord) -> dict:
     d["device_ids"] = np.asarray(r.device_ids).astype(int).tolist()
     d["dropped"] = np.asarray(r.dropped).astype(int).tolist()
     d["corrupt_ids"] = np.asarray(r.corrupt_ids).astype(int).tolist()
+    d["failed_ids"] = np.asarray(r.failed_ids).astype(int).tolist()
     d["degraded"] = bool(r.degraded)
     return d
 
@@ -488,6 +512,9 @@ def _record_from_dict(d: dict) -> RoundRecord:
     d["device_ids"] = np.asarray(d["device_ids"], dtype=int)
     d["dropped"] = np.asarray(d["dropped"], dtype=int)
     d["corrupt_ids"] = np.asarray(d.get("corrupt_ids", []), dtype=int)
+    d["failed_ids"] = np.asarray(d.get("failed_ids", []), dtype=int)
+    d.setdefault("rung", None)
+    d.setdefault("decision_ms", None)
     return RoundRecord(**d)
 
 

@@ -93,8 +93,11 @@ def rejection_mask(global_params: PyTree, stacked_params: PyTree,
     ranked = jnp.sort(jnp.where(valid, norm, jnp.inf))
     cnt = valid.sum()
     med = ranked[jnp.maximum(cnt - 1, 0) // 2]  # lower median
+    # Median-of-one degenerate: a single surviving lane IS its own median,
+    # so the threshold test is vacuous (and with mult < 1 would reject the
+    # only update we have) — keep it unconditionally.
     # NaN norms compare False, but keep the finite guard explicit.
-    return part & finite & (norm <= mult * med + _REJECT_EPS)
+    return part & finite & ((norm <= mult * med + _REJECT_EPS) | (cnt <= 1))
 
 
 def rejection_mask_host(global_params: PyTree, stacked_params: PyTree,
@@ -111,6 +114,9 @@ def rejection_mask_host(global_params: PyTree, stacked_params: PyTree,
     valid = part & finite
     if not valid.any():
         return np.zeros_like(part)
+    if int(valid.sum()) == 1:
+        # Median-of-one: the sole survivor is its own median — keep it.
+        return valid.copy()
     med = np.sort(norm[valid])[(int(valid.sum()) - 1) // 2]
     with np.errstate(invalid="ignore"):
         ok = norm <= float(mult) * med + _REJECT_EPS

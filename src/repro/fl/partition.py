@@ -35,6 +35,19 @@ def noniid_partition(labels: np.ndarray, num_devices: int,
         parts[c] = chunks
         min_part = min(min_part, min(len(ch) for ch in chunks))
     width = int(min_part) * classes_per_device
+    if width == 0:
+        # Some class split into `parts_per_class` chunks came out empty —
+        # every device shard would be width 0 (a zero-row gather the local
+        # train step can only skip). Fail early with the actual sizing math
+        # instead of a downstream ZeroDivisionError.
+        counts = {int(c): int(np.count_nonzero(labels == c)) for c in classes}
+        starved = min(counts, key=counts.get)
+        raise ValueError(
+            f"noniid_partition: {len(labels)} samples over {len(classes)} "
+            f"classes split {parts_per_class} ways leaves class {starved} "
+            f"(n={counts[starved]}) with empty parts (width 0). Provide "
+            f">= {parts_per_class} samples per class or lower "
+            f"parts_per_class.")
     out = np.zeros((num_devices, width), dtype=np.int64)
     for k in range(num_devices):
         cs = rng.choice(classes, size=classes_per_device, replace=False)

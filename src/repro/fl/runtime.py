@@ -57,6 +57,10 @@ def _local_train_one(params, cfg: ModelConfig, x, y, epochs: int,
     """SGD local update of one device. x: (W, ...), y: (W,). Devices holding
     fewer than ``batch_size`` samples train on one full-shard batch."""
     W = x.shape[0]
+    if W == 0:
+        # Width-0 shard (an empty device): nothing to train on — the local
+        # update is the identity. Static-shape branch, so jit-safe.
+        return params
     batch_size = min(batch_size, W)
     steps = max(W // batch_size, 1)
     xb = x[: steps * batch_size].reshape(steps, batch_size, *x.shape[1:])

@@ -43,14 +43,22 @@ def cmd_report(args) -> int:
     print("  " + "  ".join(line))
 
     if args.metrics:
+        metrics = rpt.load_metrics(args.metrics)
         print("\nper-job summary (metrics JSONL):")
-        for job, s in rpt.per_job_summary(rpt.load_metrics(
-                args.metrics)).items():
+        for job, s in rpt.per_job_summary(metrics).items():
             print(f"  job {job}: rounds={s['rounds']:4d} "
                   f"mean_cost={s['mean_cost']:.3f} "
                   f"mean_fairness={s['mean_fairness']:.3f} "
                   f"final_acc={s['final_accuracy']:.3f} "
                   f"degraded={s['degraded_rounds']}")
+        slo = rpt.slo_summary(metrics)
+        if slo is not None:
+            print(f"\nslo ladder ({slo['decisions']} decisions, "
+                  f"{slo['degraded_decisions']} degraded):")
+            for rung, s in slo["rungs"].items():
+                tail = (f" p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms"
+                        if "p50_ms" in s else "")
+                print(f"  rung {rung:12s} n={s['count']:5d}{tail}")
 
     rc = 0
     if args.diff:

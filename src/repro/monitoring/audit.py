@@ -47,6 +47,9 @@ class SchedulerAudit:
             "est_cost": None if rec.est_cost is None else float(rec.est_cost),
             "fairness": rec.fairness,
             "degraded": bool(rec.degraded),
+            "rung": getattr(rec, "rung", None),
+            "decision_ms": (None if getattr(rec, "decision_ms", None) is None
+                            else float(rec.decision_ms)),
             "loss": rec.loss,
             "accuracy": rec.accuracy,
             "devices": np.asarray(rec.device_ids).tolist(),

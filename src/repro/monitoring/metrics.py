@@ -50,6 +50,8 @@ class MetricsLogger:
             "fairness": rec.fairness, "loss": rec.loss,
             "accuracy": rec.accuracy, "est_cost": rec.est_cost,
             "degraded": bool(rec.degraded),
+            "rung": getattr(rec, "rung", None),
+            "decision_ms": getattr(rec, "decision_ms", None),
             "n_devices": int(len(rec.device_ids)),
             "n_dropped": int(len(rec.dropped))})
 

@@ -121,6 +121,28 @@ def per_job_summary(metrics: List[dict]) -> Dict[int, dict]:
     return out
 
 
+def slo_summary(metrics: List[dict]) -> Optional[dict]:
+    """Degradation-ladder rollup from round-metrics JSONL rows carrying the
+    SLO axis' ``rung``/``decision_ms`` fields (see ``repro.serve.resilience``).
+    None when no row has a rung — the run had no governor attached."""
+    rows = [m for m in metrics if m.get("rung") is not None]
+    if not rows:
+        return None
+    out: Dict[str, dict] = {}
+    for rung in sorted({str(m["rung"]) for m in rows}):
+        ms = np.asarray([float(m["decision_ms"]) for m in rows
+                         if str(m["rung"]) == rung
+                         and m.get("decision_ms") is not None])
+        entry = {"count": sum(1 for m in rows if str(m["rung"]) == rung)}
+        if ms.size:
+            entry["p50_ms"] = float(np.percentile(ms, 50))
+            entry["p99_ms"] = float(np.percentile(ms, 99))
+        out[rung] = entry
+    degraded = sum(1 for m in rows if str(m["rung"]) != "full")
+    return {"rungs": out, "decisions": len(rows),
+            "degraded_decisions": degraded}
+
+
 # ---- rendering ----
 
 def format_table(stats: Dict[str, dict], sort_by: str = "total_ms") -> str:
@@ -146,7 +168,11 @@ def summarize(trace_path: str,
         "rounds_per_sec": rounds_per_sec(stats),
     }
     if metrics_path:
-        out["jobs"] = per_job_summary(load_metrics(metrics_path))
+        metrics = load_metrics(metrics_path)
+        out["jobs"] = per_job_summary(metrics)
+        slo = slo_summary(metrics)
+        if slo is not None:
+            out["slo"] = slo
     return out
 
 

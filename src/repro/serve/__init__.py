@@ -14,15 +14,23 @@ incrementally instead of re-searching from scratch on every change.
   retire/readmit cycles.
 - ``repro.serve.metrics``  — decision-latency percentiles, throughput,
   queue depth, per-tenant cost/fairness accounting.
+- ``repro.serve.resilience`` — the SLO axis' runtime: the decision
+  governor's degradation ladder (full -> incremental -> greedy ->
+  last-good), per-tenant/per-fault-domain circuit breakers, and the
+  stalled-round watchdog (``--set slo.decision_deadline_ms=...``).
 """
 
 from repro.serve.metrics import LatencyStats, ServiceMetrics, ServiceReport
+from repro.serve.resilience import (RUNGS, BreakerBoard, CircuitBreaker,
+                                    DecisionGovernor, RoundWatchdog,
+                                    attach_resilience)
 from repro.serve.service import SchedulerService
 from repro.serve.traffic import (TrafficEvent, load_trace, poisson_trace,
                                  save_trace, trace_from_spec)
 
 __all__ = [
-    "LatencyStats", "SchedulerService", "ServiceMetrics", "ServiceReport",
-    "TrafficEvent", "load_trace", "poisson_trace", "save_trace",
-    "trace_from_spec",
+    "RUNGS", "BreakerBoard", "CircuitBreaker", "DecisionGovernor",
+    "LatencyStats", "RoundWatchdog", "SchedulerService", "ServiceMetrics",
+    "ServiceReport", "TrafficEvent", "attach_resilience", "load_trace",
+    "poisson_trace", "save_trace", "trace_from_spec",
 ]

@@ -51,6 +51,18 @@ def _print_report(service: SchedulerService) -> None:
     print(f"  latency: p50={lat['p50_s'] * 1e3:.2f}ms "
           f"p99={lat['p99_s'] * 1e3:.2f}ms over {lat['count']} decisions; "
           f"queue depth max={r.queue_depth_max}")
+    res = r.resilience
+    if res:
+        rungs = res.get("rung_counts", {})
+        hist = " ".join(f"{k}={v}" for k, v in rungs.items() if v)
+        print(f"  slo:     rungs[{hist or 'none'}] "
+              f"shed={res['shed_arrivals']} deferred={res['deferrals']} "
+              f"breaker_trips={res['breaker_trips']} "
+              f"recoveries={res['recoveries']} "
+              f"deadline_misses={res.get('deadline_misses', 0)}")
+        for rung, st in sorted(res.get("rung_latency_ms", {}).items()):
+            print(f"    rung {rung:12s} n={st['count']:4d} "
+                  f"p50={st['p50']:.2f}ms p99={st['p99']:.2f}ms")
     for name, t in sorted(service.metrics.tenants.items()):
         print(f"    {name:12s} rounds={t.rounds:4d} "
               f"admissions={t.admissions} "

@@ -109,6 +109,12 @@ class ServiceMetrics:
     churn_events: int = 0
     rounds_completed: int = 0
     decisions: int = 0         # admission rescoring passes
+    # SLO resilience accounting (the ``slo`` axis; all 0 without it).
+    shed_arrivals: int = 0     # dropped: breaker open / queue full / latency
+    deferrals: int = 0         # queued despite a free slot (p99 pressure)
+    recoveries: int = 0        # watchdog checkpoint restores
+    breaker_trips: int = 0     # breaker open transitions observed
+    degraded_rounds: int = 0   # rounds whose plan came from a non-full rung
 
     def tenant(self, name: str, template: int) -> TenantStats:
         ts = self.tenants.get(name)
@@ -123,7 +129,9 @@ class ServiceMetrics:
     # ---- persistence (crash-consistent service resume) ----
 
     _COUNTERS = ("events_processed", "arrivals", "departures", "readmissions",
-                 "rejections", "churn_events", "rounds_completed", "decisions")
+                 "rejections", "churn_events", "rounds_completed", "decisions",
+                 "shed_arrivals", "deferrals", "recoveries", "breaker_trips",
+                 "degraded_rounds")
 
     def to_state(self) -> dict:
         """Full mutable state as a JSON-serializable dict (raw latency and
@@ -137,8 +145,9 @@ class ServiceMetrics:
         }
 
     def load_state(self, state: dict) -> None:
+        # .get: checkpoints written before the SLO axis lack its counters.
         for k in self._COUNTERS:
-            setattr(self, k, int(state[k]))
+            setattr(self, k, int(state.get(k, 0)))
         self.decision_latency = LatencyStats(
             samples=[float(s) for s in state["latency_samples"]])
         self.queue_depth_samples = [int(s)
@@ -146,10 +155,12 @@ class ServiceMetrics:
         self.tenants = {d["tenant"]: TenantStats(**d)
                         for d in state["tenants"]}
 
-    def report(self, sim_horizon: float, wall_s: float) -> "ServiceReport":
+    def report(self, sim_horizon: float, wall_s: float,
+               resilience: Optional[dict] = None) -> "ServiceReport":
         rounds = np.asarray(
             [t.rounds for t in self.tenants.values()], dtype=np.float64)
         return ServiceReport(
+            resilience=resilience,
             decision_latency=self.decision_latency.to_dict(),
             decisions_per_sec=(self.decisions / wall_s if wall_s > 0 else 0.0),
             rounds_per_sec=(self.rounds_completed / wall_s
@@ -188,6 +199,9 @@ class ServiceReport:
     rounds_completed: int
     sim_horizon: float
     wall_s: float
+    # SLO resilience summary (``DecisionGovernor.summary`` + the service's
+    # shed/defer/recovery counters); None when the axis is off.
+    resilience: Optional[dict] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

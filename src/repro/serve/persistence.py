@@ -80,6 +80,18 @@ def service_state(service) -> Tuple[dict, dict]:
         # leaves), so the tenant list must ride here for the like-tree.
         "tenant_saved_keys": sorted(service._tenant_saved),
     }
+    # SLO resilience state (``repro.serve.resilience``): last-good plans,
+    # rung/shed counters, breaker board, watchdog stall counts — all JSON.
+    # Wall-clock latency windows are deliberately NOT persisted (they are
+    # not replayable); they re-fill after resume.
+    resilience = {}
+    if eng.governor is not None:
+        resilience["governor"] = eng.governor.state_dict()
+    wd = getattr(service, "_watchdog", None)
+    if wd is not None:
+        resilience["watchdog"] = wd.state_dict()
+    if resilience:
+        extra["resilience"] = resilience
     return tree, extra
 
 
@@ -186,6 +198,17 @@ def restore_service(service, directory: str,
     service._rescore_cache = {}   # memo of pure functions: rebuilt on miss
     service.trace = [TrafficEvent.from_dict(d) for d in extra["trace"]]
     service._next_event = int(extra["next_event"])
+
+    # SLO resilience state (.get: pre-SLO checkpoints lack the key).
+    resilience = extra.get("resilience") or {}
+    if eng.governor is not None and resilience.get("governor") is not None:
+        eng.governor.load_state_dict(resilience["governor"])
+    wd = getattr(service, "_watchdog", None)
+    if wd is not None and resilience.get("watchdog") is not None:
+        wd.load_state_dict(resilience["watchdog"])
+    sync = getattr(service, "_sync_queue_depth", None)
+    if sync is not None:
+        sync()
 
     # Re-announce in-flight cohorts to batching runtimes (the pre-crash
     # announcement died with the process; SyntheticRuntime has no hook).

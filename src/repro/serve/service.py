@@ -35,6 +35,7 @@ decision (``add_job(launch=False)`` + ``launch_job``).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, List, Optional, Set
 
 import numpy as np
@@ -43,6 +44,7 @@ from repro.core.multijob import MultiJobEngine, RoundRecord
 from repro.experiment.spec import ExperimentSpec
 from repro.monitoring.trace import instant, span
 from repro.serve.metrics import ServiceMetrics, ServiceReport
+from repro.serve.resilience import RoundWatchdog
 from repro.serve.traffic import TrafficEvent, trace_from_spec
 
 RESCORE_MODES = ("incremental", "full")
@@ -87,18 +89,20 @@ class SchedulerService:
         self.trace: Optional[List[TrafficEvent]] = None
         self._next_event = 0   # resume cursor: traffic events already applied
 
-        self.engine: MultiJobEngine = spec.build().engine
+        # SLO resilience axis: backpressure thresholds, the watchdog, and
+        # (inside the engine) the decision governor + breakers.
+        self._slo = spec.effective_slo()
+        self._watchdog = (RoundWatchdog(self._slo.watchdog_rounds)
+                          if self._slo is not None
+                          and self._slo.watchdog_rounds > 0 else None)
+        self._draining = False   # post-trace drain forces deferred admits
+
+        self.engine: MultiJobEngine = self._fresh_engine()
         eng = self.engine
-        # The catalogue: template configs + their data-size columns. Park
-        # the template jobs — they exist so build()/calibration see a valid
-        # job mix, but only arrival-instantiated jobs ever run.
+        # The catalogue: template configs + their data-size columns.
         self.templates = [js.config for js in eng.jobs]
         self.template_data = [eng.pool.data_sizes[:, i].copy()
                               for i in range(len(self.templates))]
-        for js in eng.jobs:
-            js.parked = True
-            js.done = True
-        eng.on_job_done = self._on_job_done
 
         self.metrics = ServiceMetrics()
         self._live: Set[int] = set()            # admitted, not finished
@@ -140,6 +144,18 @@ class SchedulerService:
 
     # ---- construction helpers ----
 
+    def _fresh_engine(self) -> MultiJobEngine:
+        """Build the construction-time engine skeleton (also the watchdog-
+        recovery rebuild path): template jobs parked — they exist so
+        build()/calibration see a valid job mix, but only
+        arrival-instantiated jobs ever run — and the done-callback wired."""
+        eng = self.spec.build().engine
+        for js in eng.jobs:
+            js.parked = True
+            js.done = True
+        eng.on_job_done = self._on_job_done
+        return eng
+
     def _make_cold_scheduler(self):
         """A second scheduler instance for the ``full`` ablation: same
         registry entry and knobs, own seed/rng (so its advisory searches
@@ -161,7 +177,17 @@ class SchedulerService:
 
     def _on_round(self, rec: RoundRecord) -> None:
         self.metrics.rounds_completed += 1
+        if rec.rung is not None and rec.rung != "full":
+            self.metrics.degraded_rounds += 1
         tenant = self._job_tenant.get(rec.job)
+        gov = self.engine.governor
+        if gov is not None and gov.breakers is not None:
+            # Simulated-time breaker feedback: the round's end instant.
+            for ch in gov.note_round(rec, tenant, rec.t_end):
+                if ch["state"] == "open":
+                    self.metrics.breaker_trips += 1
+                if self.engine.events is not None:
+                    self.engine.events.publish("serve.breaker", ch)
         if tenant is None:
             return
         ts = self.metrics.tenants[tenant]
@@ -178,6 +204,32 @@ class SchedulerService:
 
     # ---- admission control ----
 
+    def _sync_queue_depth(self) -> None:
+        """Mirror the admission queue into the governor (its deterministic
+        queue-pressure input for the degradation ladder)."""
+        gov = self.engine.governor
+        if gov is not None:
+            gov.queue_depth = len(self._queue)
+
+    def _latency_pressure(self) -> bool:
+        """Is the rolling p99 decision latency over the SLO deadline? (The
+        wall-clock admission-backpressure signal; False without a
+        deadline.)"""
+        slo = self._slo
+        if slo is None or slo.decision_deadline_ms is None:
+            return False
+        gov = self.engine.governor
+        return gov is not None and gov.rolling_p99() > slo.decision_deadline_ms
+
+    def _shed(self, tenant: str, now: float, reason: str) -> None:
+        self.metrics.shed_arrivals += 1
+        if self.engine.events is not None:
+            self.engine.events.publish("serve.shed", dict(
+                tenant=tenant, t=now, reason=reason, action="shed",
+                queue_depth=len(self._queue)))
+        if self.verbose:
+            print(f"[t={now:9.1f}s] shed   {tenant} ({reason})")
+
     def _release(self, job: int, now: float) -> None:
         tenant = self._job_tenant.get(job)
         if tenant is not None and self._tenant_job.get(tenant) == job:
@@ -186,8 +238,14 @@ class SchedulerService:
         self._rescore_cache.pop(job, None)
         self._drain_queue(now)
 
-    def _drain_queue(self, now: float) -> None:
+    def _drain_queue(self, now: float, force: bool = False) -> None:
+        force = force or self._draining
         while self._queue and len(self._live) < self.spec.arrivals.max_concurrent:
+            if not force and self._latency_pressure():
+                # Overload: keep deferring even though a slot is free; the
+                # post-trace drain (and any later release once the window
+                # cools) picks the queue back up.
+                break
             # Least-served first: the tenant with the fewest rounds across
             # ALL its admissions gets the freed slot.
             self._queue.sort(key=lambda t: self.metrics.tenants[t].rounds)
@@ -200,7 +258,9 @@ class SchedulerService:
                     self.engine.events.publish("serve.queue_wait", dict(
                         tenant=tenant, t=now, wait_s=wait))
             self.metrics.tenants[tenant].queued_at = None
+            self._sync_queue_depth()
             self._admit(tenant, self._tenant_template[tenant], now)
+        self._sync_queue_depth()
 
     def _admit(self, tenant: str, template: int, now: float) -> None:
         t0 = time.perf_counter()
@@ -293,12 +353,45 @@ class SchedulerService:
             self.metrics.tenant(ev.tenant, template)
             if ev.tenant in self._tenant_job or ev.tenant in self._queue:
                 return  # duplicate arrival of a live/queued tenant
+            slo = self._slo
+            gov = eng.governor
+            # Circuit breaker: an open tenant breaker sheds the arrival
+            # outright (allow() also grants the half-open probe admission).
+            if (gov is not None and gov.breakers is not None
+                    and not gov.breakers.tenant(ev.tenant).allow(now)):
+                self._shed(ev.tenant, now, "breaker_open")
+                return
+            # Queue-depth bound: beyond it the arrival is shed, not queued.
+            if (slo is not None and slo.max_queue_depth is not None
+                    and len(self._queue) >= slo.max_queue_depth):
+                self._shed(ev.tenant, now, "queue_full")
+                return
             if len(self._live) < self.spec.arrivals.max_concurrent:
+                if self._latency_pressure():
+                    # Rolling p99 over the deadline: the decision path is
+                    # overloaded, so don't add work even though a slot is
+                    # free — defer (queue) or shed per policy.
+                    if slo.shed_policy == "shed":
+                        self._shed(ev.tenant, now, "latency")
+                        return
+                    self.metrics.deferrals += 1
+                    self.metrics.tenants[ev.tenant].queued_at = now
+                    self._queue.append(ev.tenant)
+                    self._sync_queue_depth()
+                    if eng.events is not None:
+                        eng.events.publish("serve.shed", dict(
+                            tenant=ev.tenant, t=now, reason="latency",
+                            action="defer", queue_depth=len(self._queue)))
+                    if self.verbose:
+                        print(f"[t={now:9.1f}s] defer  {ev.tenant} "
+                              f"(depth={len(self._queue)})")
+                    return
                 self._admit(ev.tenant, template, now)
             else:
                 self.metrics.rejections += 1
                 self.metrics.tenants[ev.tenant].queued_at = now
                 self._queue.append(ev.tenant)
+                self._sync_queue_depth()
                 if self.verbose:
                     print(f"[t={now:9.1f}s] queue  {ev.tenant} "
                           f"(depth={len(self._queue)})")
@@ -306,6 +399,7 @@ class SchedulerService:
             self.metrics.departures += 1
             if ev.tenant in self._queue:
                 self._queue.remove(ev.tenant)
+                self._sync_queue_depth()
                 return
             job = self._tenant_job.get(ev.tenant)
             if job is None:
@@ -345,17 +439,21 @@ class SchedulerService:
         service report; per-job engine summaries stay on
         ``self.engine.summary()``."""
         arr = self.spec.arrivals
-        eng = self.engine
         if trace is None:
             # A resumed service replays ITS OWN saved trace (regenerating
             # would fork the trajectory if the spec's seed axis changed).
             trace = self.trace if self.trace is not None else trace_from_spec(
-                arr, len(self.templates), eng.pool.num_devices)
+                arr, len(self.templates), self.engine.pool.num_devices)
         self.trace = trace
         t0 = time.perf_counter()
         try:
-            for i in range(self._next_event, len(trace)):
-                ev = trace[i]
+            # While-loop over the resume cursor (not a range): watchdog
+            # recovery rewinds ``_next_event`` and swaps ``self.engine``
+            # mid-run, so both are re-read every iteration.
+            while self._next_event < len(self.trace):
+                eng = self.engine
+                i = self._next_event
+                ev = self.trace[i]
                 with span("serve_advance", until=ev.t):
                     eng.advance_until(ev.t, on_round=self._on_round)
                 with span("handle_event", kind=ev.kind):
@@ -378,17 +476,106 @@ class SchedulerService:
                     raise SimulatedCrash(
                         f"crash_after={self.crash_after}: simulated hard "
                         f"kill after event {self._next_event}")
+                if self._watchdog is not None:
+                    self._watchdog_tick(ev.t)
             # Drain: live jobs run to completion; finishing jobs release
             # slots, which admits queued tenants mid-drain (on_job_done
             # fires inside advance_until, so late admissions still execute).
+            # ``_draining`` lifts the p99 deferral hold first.
+            self._draining = True
+            self._drain_queue(self.engine.clock, force=True)
             with span("serve_advance", until=float("inf")):
-                eng.advance_until(np.inf, on_round=self._on_round)
+                self.engine.advance_until(np.inf, on_round=self._on_round)
         finally:
             # The spec's obs axis hung a session on the engine at build();
             # the service owns the run, so it finalizes (trace write + sink
             # close) even on a simulated crash.
-            if eng.obs is not None:
-                eng.obs.close()
+            if self.engine.obs is not None:
+                self.engine.obs.close()
         self.last_report = self.metrics.report(
-            sim_horizon=arr.horizon, wall_s=time.perf_counter() - t0)
+            sim_horizon=arr.horizon, wall_s=time.perf_counter() - t0,
+            resilience=self.resilience_summary())
         return self.last_report
+
+    # ---- watchdog recovery ----
+
+    def _watchdog_tick(self, now: float) -> None:
+        wedged = self._watchdog.check(self.engine)
+        if not wedged:
+            return
+        eng = self.engine
+        if eng.events is not None:
+            eng.events.publish("serve.stall", dict(
+                jobs=list(wedged), t=now,
+                recoveries=self.metrics.recoveries))
+        can_restore = (self._ckpt_manager is not None
+                       and self.metrics.recoveries < self._slo.max_recoveries)
+        if can_restore:
+            from repro.checkpoint import committed_steps
+
+            can_restore = bool(committed_steps(self.checkpoint_dir))
+        if can_restore:
+            self._recover(now, wedged)
+        else:
+            # No committed snapshot (or recovery budget exhausted): best
+            # effort — push the wedged jobs back into the event loop.
+            warnings.warn(
+                f"watchdog: jobs {wedged} stalled with no usable checkpoint "
+                "(or max_recoveries reached); re-launching them in place",
+                RuntimeWarning)
+            for j in wedged:
+                eng._launch(j, max(eng.clock, now))
+            self._watchdog.reset()
+
+    def _recover(self, now: float, wedged: List[int]) -> None:
+        """Rebuild the engine skeleton and restore the newest committed
+        checkpoint IN PLACE, rewinding the traffic cursor to the saved
+        boundary — the run loop then replays forward deterministically."""
+        from repro.serve.persistence import restore_service
+
+        warnings.warn(
+            f"watchdog: jobs {wedged} stalled for "
+            f"{self._slo.watchdog_rounds} checks; restoring from the newest "
+            f"checkpoint in {self.checkpoint_dir}", RuntimeWarning)
+        if self.engine.obs is not None:
+            self.engine.obs.close()
+        self.engine = self._fresh_engine()
+        if self.rescore_mode == "full":
+            self._cold = self._make_cold_scheduler()
+        # Reset the dynamic maps to construction state so restore_service
+        # re-adds the arrival-instantiated jobs onto a clean skeleton.
+        self._live = set()
+        self._queue = []
+        self._tenant_job = {}
+        self._job_tenant = {}
+        self._tenant_template = {}
+        self._tenant_saved = {}
+        self._rescore_cache = {}
+        step = restore_service(self, self.checkpoint_dir)
+        self.metrics.recoveries += 1
+        self._watchdog.reset()
+        self._sync_queue_depth()
+        if self.engine.events is not None:
+            self.engine.events.publish("serve.recovered", dict(
+                t=now, step=step, jobs=list(wedged),
+                recoveries=self.metrics.recoveries))
+        if self.verbose:
+            print(f"[t={now:9.1f}s] recovered from checkpoint step {step} "
+                  f"(stalled jobs {wedged})")
+
+    # ---- resilience reporting ----
+
+    def resilience_summary(self) -> Optional[dict]:
+        """Degradation/shed/breaker/recovery accounting for the report
+        (None when the SLO axis is off)."""
+        gov = self.engine.governor
+        if gov is None and self._slo is None:
+            return None
+        out = gov.summary() if gov is not None else {}
+        out.update(
+            shed_arrivals=self.metrics.shed_arrivals,
+            deferrals=self.metrics.deferrals,
+            recoveries=self.metrics.recoveries,
+            breaker_trips=self.metrics.breaker_trips,
+            degraded_rounds=self.metrics.degraded_rounds)
+        return out

@@ -57,3 +57,57 @@ def test_manager_gc_partial_on_init(tmp_path, tree):
 def test_restore_missing_raises(tmp_path, tree):
     with pytest.raises(FileNotFoundError):
         load_checkpoint(str(tmp_path / "nope"), tree)
+
+
+def test_manager_keep3_gc_under_repeated_saves(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    for s in range(1, 9):
+        mgr.save(s, tree)
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                       if n.startswith("step_"))
+        assert steps == list(range(max(1, s - 2), s + 1))
+    assert mgr.latest_step() == 8
+
+
+def _corrupt(tmp_path, step, what="arrays"):
+    d = tmp_path / f"step_{step:010d}"
+    if what == "arrays":
+        with open(d / "arrays.npz", "wb") as f:
+            f.write(b"not a zipfile")      # torn npz
+    elif what == "manifest":
+        with open(d / "manifest.json", "w") as f:
+            f.write('{"step": ')           # truncated JSON
+    else:
+        os.remove(d / "arrays.npz")        # file lost entirely
+
+
+@pytest.mark.parametrize("what", ["arrays", "manifest", "missing"])
+def test_restore_falls_back_past_corrupt_latest(tmp_path, tree, what):
+    save_checkpoint(str(tmp_path), 1, tree, extra={"cursor": 1})
+    save_checkpoint(str(tmp_path), 2, tree, extra={"cursor": 2})
+    _corrupt(tmp_path, 2, what)
+    with pytest.warns(UserWarning, match="unreadable"):
+        step, restored, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 1 and extra == {"cursor": 1}
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        tree, restored)
+
+
+def test_restore_explicit_corrupt_step_still_raises(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    _corrupt(tmp_path, 2, "arrays")
+    with pytest.raises(Exception):
+        load_checkpoint(str(tmp_path), tree, step=2)
+
+
+def test_restore_all_corrupt_raises(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    _corrupt(tmp_path, 1, "manifest")
+    _corrupt(tmp_path, 2, "arrays")
+    with pytest.warns(UserWarning), pytest.raises(FileNotFoundError,
+                                                  match="unreadable"):
+        load_checkpoint(str(tmp_path), tree)

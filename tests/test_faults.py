@@ -238,6 +238,28 @@ def test_rejection_mask_matches_host_reference():
         np.testing.assert_array_equal(host, fused, err_msg=f"trial {trial}")
 
 
+def test_rejection_mask_keeps_single_survivor():
+    """Median-of-one degenerate: with ONE valid lane, its norm IS the
+    median, so any mult < 1 would reject the only update available — the
+    rule must keep it unconditionally (jit and host must agree)."""
+    import jax.numpy as jnp
+
+    from repro.fl.aggregation import rejection_mask, rejection_mask_host
+
+    g = {"w": np.zeros((4,), np.float32)}
+    s = {"w": np.stack([np.full((4,), 2.0, np.float32),     # nonzero norm
+                        np.full((4,), np.inf, np.float32),  # non-finite
+                        np.full((4,), 9.0, np.float32)])}   # zero weight
+    for w in ([1.0, 1.0, 0.0],     # lane 1 killed by the finite guard
+              [1.0, 0.0, 0.0]):    # lanes 1-2 not participating
+        w = np.asarray(w, np.float32)
+        host = rejection_mask_host(g, s, w, 0.5)
+        fused = np.asarray(rejection_mask(g, s, jnp.asarray(w),
+                                          jnp.float32(0.5)))
+        np.testing.assert_array_equal(host, [True, False, False], err_msg=str(w))
+        np.testing.assert_array_equal(fused, host, err_msg=str(w))
+
+
 def test_robust_fedavg_guards():
     import jax.numpy as jnp
 

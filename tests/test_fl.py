@@ -85,6 +85,19 @@ def test_local_training_reduces_local_loss():
     assert float(l1) < float(l0)
 
 
+def test_local_train_width0_shard_is_identity():
+    """A device holding zero samples must return its params unchanged
+    instead of crashing on a zero-row gather/reshape."""
+    cfg = cnn_b()
+    params = cnn_init(cfg, seed=0)
+    x = jnp.zeros((0,) + cfg.input_shape, jnp.float32)
+    y = jnp.zeros((0,), jnp.int32)
+    out = _local_train_one(params, cfg, x, y, 3, 32, 0.05)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_fl_runtime_round_improves_accuracy_iid():
     cfg = lenet5()
     x, y = make_classification_dataset(4000, cfg.input_shape, cfg.num_classes,

@@ -42,6 +42,19 @@ def test_partition_indices_in_range(seed, num_devices):
     assert part.shape[0] == num_devices
 
 
+def test_noniid_starved_class_raises_informatively():
+    """Too few samples per class for the requested split must fail early
+    with the sizing math, not produce width-0 shards (or divide by zero
+    downstream)."""
+    _, y = make_classification_dataset(60, (2, 2, 1), 10, seed=0)
+    # ~6 samples/class split 20 ways: some chunks are inevitably empty
+    with pytest.raises(ValueError, match="parts_per_class"):
+        noniid_partition(y, 10, parts_per_class=20, seed=1)
+    # the same data partitions fine when the split is feasible
+    part = noniid_partition(y, 10, parts_per_class=2, seed=1)
+    assert part.shape[1] > 0
+
+
 def test_train_eval_share_prototypes():
     x1, y1 = make_classification_dataset(100, (4, 4, 1), 10, noise=0.0, seed=0)
     x2, y2 = make_classification_dataset(100, (4, 4, 1), 10, noise=0.0, seed=99)

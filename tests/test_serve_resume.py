@@ -31,7 +31,8 @@ def service_spec(scheduler="bods", with_faults=True, num_devices=40):
 def record_tuples(service):
     return [(r.job, r.round_idx, r.t_start, r.t_end, r.round_time, r.cost,
              r.fairness, r.loss, r.accuracy, tuple(r.device_ids),
-             tuple(r.dropped), tuple(r.corrupt_ids), r.degraded)
+             tuple(r.dropped), tuple(r.corrupt_ids), tuple(r.failed_ids),
+             r.degraded, r.rung, r.decision_ms)
             for r in service.engine.records]
 
 
